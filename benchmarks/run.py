@@ -1,0 +1,28 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    from . import paper_figs
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in paper_figs.ALL:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{fn.__name__},0.0,ERROR:{type(e).__name__}:{e}")
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+        print(f"#{fn.__name__} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

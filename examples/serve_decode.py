@@ -1,0 +1,66 @@
+"""Serving example: prefill + batched greedy decode with KV/SSM caches.
+
+Runs a reduced config of any assigned architecture (--arch) on local
+devices, prefilel a prompt batch, then decodes tokens autoregressively.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen2-1.5b --tokens 32
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=configs.list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke_config(args.arch)
+    params, _ = api.init(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batch = {"inputs": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.n_img_tokens > 0:
+        batch["img_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.n_img_tokens, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.enc_frames, cfg.d_model))
+
+    s_max = args.prompt_len + args.tokens + 8
+    t0 = time.time()
+    logits, caches = jax.jit(
+        lambda p, b: api.prefill(cfg, p, b, s_max))(params, batch)
+    print(f"prefill[{args.batch}x{args.prompt_len}] in {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda p, t, c: api.decode_step(cfg, p, t, c))
+    tok = jnp.argmax(logits, axis=-1)
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, caches = step(params, tok, caches)
+        tok = jnp.argmax(logits, axis=-1)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    seqs = np.stack(out, axis=1)
+    print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s on CPU)")
+    print("first sequence token ids:", seqs[0][:16], "...")
+    assert np.isfinite(seqs).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Architecture config registry: one module per assigned architecture."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.base import ModelConfig
+from .shapes import SHAPES, ShapeSpec, shape_applicable
+
+ARCHS: List[str] = [
+    "phi_3_vision_4_2b",
+    "granite_moe_1b_a400m",
+    "qwen3_moe_235b_a22b",
+    "mistral_large_123b",
+    "qwen2_1_5b",
+    "qwen3_14b",
+    "qwen3_1_7b",
+    "jamba_1_5_large_398b",
+    "whisper_medium",
+    "mamba2_780m",
+]
+
+# CLI ids as assigned (dashes/dots) -> module names.
+ALIASES = {
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen3-14b": "qwen3_14b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-medium": "whisper_medium",
+    "mamba2-780m": "mamba2_780m",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f".{mod}", __package__)
+
+
+def get_config(name: str) -> ModelConfig:
+    """Full-size (paper-exact) config for an assigned architecture."""
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(name).smoke()
+
+
+def list_archs() -> List[str]:
+    return list(ALIASES.keys())
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (no allocation)."""
+    import jax
+    import numpy as np
+    from ..models import api
+    shapes = jax.eval_shape(lambda k: api.init(cfg, k)[0],
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of n_experts)."""
+    total = param_count(cfg)
+    if cfg.n_experts <= 0:
+        return total
+    # expert weights: 3 matrices per MoE layer
+    n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                       if i % cfg.moe_every == cfg.moe_every - 1)
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    expert_total = n_moe_layers * cfg.n_experts * per_expert
+    expert_active = n_moe_layers * cfg.top_k * per_expert
+    return total - expert_total + expert_active

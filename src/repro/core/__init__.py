@@ -1,0 +1,18 @@
+# The paper's primary contribution: a Reverse Address Translation simulator
+# for UALink-class scale-up pods, the two latency-hiding optimizations the
+# paper proposes (fused pre-translation, software TLB prefetch), and the
+# translation-aware collective cost model / scheduler the framework uses for
+# its own collectives.
+from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
+                     PWCConfig, PreTranslationConfig, PrefetchConfig,
+                     paper_config, KB, MB, GB)
+from .engine import simulate, RunResult
+from .ratsim import run, compare, sweep, Comparison
+from .ref_des import simulate_ref
+
+__all__ = [
+    "SimConfig", "FabricConfig", "TranslationConfig", "TLBConfig",
+    "PWCConfig", "PreTranslationConfig", "PrefetchConfig", "paper_config",
+    "KB", "MB", "GB", "simulate", "RunResult", "run", "compare", "sweep",
+    "Comparison", "simulate_ref",
+]

@@ -1,0 +1,372 @@
+"""Page-epoch simulation engine for all-pairs AllToAll over a UALink pod.
+
+The all-pairs/direct schedule (MSCCLang) is deterministic streaming traffic:
+every source GPU concurrently streams one chunk to every peer, requests stripe
+round-robin across the 16 UALink stations, and each (flow, page) forms an
+*epoch* whose internal request timing is closed-form.  The engine therefore
+schedules only epoch-level events — O(flows x pages) of them — and expands
+per-request statistics analytically, which is exact for this workload (see
+DESIGN.md §3) and scales to the paper's 4 GB x 64 GPU sweeps in pure Python.
+
+Backpressure model: each target station has a finite ingress buffer
+(``FabricConfig.ingress_entries``).  Requests occupy a slot from arrival until
+their translation resolves; a page walk that outlasts the buffer stalls the
+whole port via credit backpressure, which is what couples Reverse Address
+Translation latency into end-to-end collective time (paper Fig. 4).  Stall
+windows of concurrent walks on one station are shared, not summed.
+
+A request-level reference DES (:mod:`repro.core.ref_des`) implements the same
+physics request-by-request and is used by the test suite to validate this
+engine at small collective sizes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .config import SimConfig
+from .tlb import TranslationState, Counters, L1_HIT, L1_HUM, INF
+
+
+@dataclass
+class Flow:
+    """One (source -> target) stream of the all-pairs schedule."""
+
+    src: int
+    dst: int
+    base_addr: int      # NPA of the region this flow writes at the target
+    nbytes: int
+    t_start: float      # issue time of request 0 at the source CU
+    delta_ns: float     # request inter-issue spacing (per-flow BW share)
+    stripe: int         # station offset for round-robin striping
+
+
+@dataclass
+class IterationResult:
+    completion_ns: float
+    ideal_completion_ns: Optional[float] = None
+    counters: Optional[Counters] = None
+
+    @property
+    def degradation(self) -> float:
+        return (self.completion_ns / self.ideal_completion_ns
+                if self.ideal_completion_ns else float("nan"))
+
+
+@dataclass
+class RunResult:
+    """Output of one simulation run (possibly several iterations)."""
+
+    iterations: List[IterationResult]
+    counters: Counters
+    config: SimConfig
+    collective_bytes: int
+    # Per-request RAT latency trace (ns), ordered by (flow, request index),
+    # only populated when cfg.collect_trace.
+    trace: Optional[np.ndarray] = None
+    trace_flow_bounds: Optional[List[int]] = None
+    mean_stall_ns: float = 0.0
+
+    @property
+    def completion_ns(self) -> float:
+        return self.iterations[0].completion_ns
+
+    @property
+    def total_ns(self) -> float:
+        return sum(it.completion_ns for it in self.iterations)
+
+    @property
+    def mean_rat_ns(self) -> float:
+        return self.counters.mean_rat_ns
+
+    def breakdown(self) -> Dict[str, float]:
+        """Mean round-trip latency components per request (paper Fig. 6)."""
+        fab = self.config.fabric
+        return {
+            "oneway_ns": fab.oneway_ns,
+            "rat_ns": self.counters.mean_rat_ns,
+            "stall_ns": self.mean_stall_ns,
+            "hbm_ns": fab.hbm_ns,
+            "return_ns": fab.return_ns,
+        }
+
+
+def _build_flows(cfg: SimConfig, nbytes: int, dst: int,
+                 t_start: float) -> List[Flow]:
+    """Flows arriving at target ``dst`` for one all-pairs AllToAll."""
+    fab = cfg.fabric
+    n = fab.n_gpus
+    chunk = nbytes // n  # self-chunk stays local
+    # Per-flow bandwidth share: (n-1) concurrent flows stripe over the full
+    # station pool at both endpoints.
+    delta = fab.request_bytes * (n - 1) / fab.gpu_bw
+    dst_base = (dst + 1) << 42  # distinct 4 TB NPA region per target GPU
+    flows = []
+    for src in range(n):
+        if src == dst:
+            continue
+        flows.append(Flow(
+            src=src, dst=dst,
+            base_addr=dst_base + src * chunk,
+            nbytes=chunk,
+            t_start=t_start,
+            delta_ns=delta,
+            stripe=src % fab.stations_per_gpu,
+        ))
+    return flows
+
+
+@dataclass
+class _Station:
+    """Per-station ingress bookkeeping for the backpressure model."""
+
+    skew: float = 0.0          # accumulated ingress stall (sigma)
+    release: float = -INF      # end of the currently-covered stall window
+    consumed: int = 0          # requests processed so far (for buffer gating)
+    total: int = 0             # total requests this iteration
+
+
+class EpochEngine:
+    """Simulates one target GPU of the pod (exact under all-pairs symmetry)."""
+
+    def __init__(self, cfg: SimConfig, dst: int = 0):
+        self.cfg = cfg
+        self.dst = dst
+        fab = cfg.fabric
+        self.state = TranslationState(cfg.translation, fab.stations_per_gpu)
+        self.stations = [_Station() for _ in range(fab.stations_per_gpu)]
+        self.page_bytes = cfg.translation.page_bytes
+        self.svc = fab.request_bytes / fab.station_bw  # station service time
+        self.buffer_cover = fab.ingress_entries * self.svc
+        self.trace_chunks: List[Tuple[int, int, np.ndarray]] = []
+        self.stall_sum = 0.0
+        self.stall_n = 0
+
+    # -- epoch construction --------------------------------------------------
+    def _epochs(self, flows: List[Flow]):
+        """Yield (first_arrival, flow_idx, page, i0, i1) sorted by time."""
+        fab = self.cfg.fabric
+        rb = fab.request_bytes
+        eps = []
+        for fi, f in enumerate(flows):
+            n_req = max(1, math.ceil(f.nbytes / rb))
+            a0 = f.t_start + fab.oneway_ns
+            # page boundaries within [base, base+nbytes)
+            first_page = f.base_addr // self.page_bytes
+            last_page = (f.base_addr + f.nbytes - 1) // self.page_bytes
+            for page in range(first_page, last_page + 1):
+                lo = max(f.base_addr, page * self.page_bytes)
+                hi = min(f.base_addr + f.nbytes, (page + 1) * self.page_bytes)
+                i0 = (lo - f.base_addr) // rb
+                i1 = min(n_req, math.ceil((hi - f.base_addr) / rb))
+                if i1 <= i0:
+                    continue
+                eps.append((a0 + i0 * f.delta_ns, fi, page, i0, i1))
+        eps.sort()
+        return eps
+
+    # -- core ----------------------------------------------------------------
+    def run_iteration(self, flows: List[Flow], collect_trace: bool) -> float:
+        cfg = self.cfg
+        fab = cfg.fabric
+        rb = fab.request_bytes
+        ns = fab.stations_per_gpu
+        l1_lat = cfg.translation.l1.hit_latency_ns if cfg.translation.enabled else 0.0
+        ctr = self.state.counters
+        completion = 0.0
+
+        pre = cfg.pretranslation
+        if pre.enabled and cfg.translation.enabled:
+            self._pretranslate(flows)
+
+        epochs = self._epochs(flows)
+        # Per-station request totals (for ingress-buffer occupancy gating).
+        for st in self.stations:
+            st.consumed = 0
+            st.total = 0
+        for f in flows:
+            n_req = max(1, math.ceil(f.nbytes / rb))
+            base, extra = divmod(n_req, ns)
+            for s_off in range(ns):
+                station = (s_off + f.stripe) % ns
+                self.stations[station].total += base + (1 if s_off < extra else 0)
+
+        for (t_first, fi, page, i0, i1) in epochs:
+            f = flows[fi]
+            d = f.delta_ns
+            a0 = f.t_start + fab.oneway_ns
+
+            # Software prefetch (paper §6.2): as this page's stream begins,
+            # request translation of the next page(s) of this flow's region.
+            if cfg.prefetch.enabled and cfg.translation.enabled:
+                self._prefetch(f, page, t_first)
+
+            trace = (np.empty(i1 - i0) if collect_trace else None)
+
+            # Per-station sub-series of this epoch's requests.
+            for s_off in range(min(ns, i1 - i0)):
+                i_s0 = i0 + s_off
+                station = (i_s0 + f.stripe) % ns
+                n_s = (i1 - i_s0 + ns - 1) // ns  # requests on this station
+                st = self.stations[station]
+                t0 = a0 + i_s0 * d + st.skew     # effective head arrival
+                res = self.state.access(station, page, t0)
+                rat0 = res.resolve - t0
+                ctr.add_request(res.klass, rat0)
+                ctr.note_max(rat0)
+                last_resolve = res.resolve
+
+                # Ingress-buffer backpressure: a translation wait longer than
+                # the buffer cover stalls the port (UALink credit flow
+                # control).  Only applies when enough requests remain to fill
+                # the buffer; overlapping walks share the stall window via
+                # `release`, and the stall persists (ingress runs at exactly
+                # link rate in all-pairs steady state, so there is no slack
+                # to re-absorb the bubble).
+                wait = res.resolve - (t0 + l1_lat)
+                if (wait > 0 and cfg.translation.enabled
+                        and st.total - st.consumed >= fab.ingress_entries):
+                    block_from = max(t0 + self.buffer_cover, st.release)
+                    if res.resolve > block_from:
+                        bubble = res.resolve - block_from
+                        st.skew += bubble
+                        st.release = res.resolve
+                        self.stall_sum += bubble
+                        self.stall_n += 1
+                st.consumed += n_s
+
+                if collect_trace:
+                    trace[i_s0 - i0] = rat0
+
+                if n_s > 1:
+                    # Tail: arrivals a_k = t0 + k*stride (k=1..n_s-1), with
+                    # the skew accrued so far (constant within an epoch).
+                    stride = ns * d
+                    fill = res.l1_fill
+                    # Requests with a_k + l1_lat < fill stall until the fill
+                    # (MSHR hit-under-miss); the rest are plain L1 hits.
+                    # #{k >= 1 : k < (fill - l1_lat - t0)/stride}
+                    if fill > -INF:
+                        x = (fill - l1_lat - t0) / stride
+                        k_hum = max(0, min(n_s - 1, math.ceil(x) - 1))
+                    else:
+                        k_hum = 0
+                    if k_hum > 0:
+                        # sum over k=1..k_hum of (fill - a_k)
+                        hum_sum = (k_hum * (fill - t0)
+                                   - stride * k_hum * (k_hum + 1) / 2)
+                        ctr.add_request(L1_HUM, hum_sum, n=k_hum)
+                        ctr.note_max(fill - (t0 + stride))
+                        last_resolve = max(last_resolve, fill)
+                    n_hit = n_s - 1 - k_hum
+                    if n_hit > 0:
+                        ctr.add_request(L1_HIT, n_hit * l1_lat, n=n_hit)
+                        last_resolve = max(
+                            last_resolve,
+                            t0 + (n_s - 1) * stride + l1_lat)
+                    if collect_trace:
+                        ks = np.arange(1, n_s)
+                        arr = t0 + ks * stride
+                        lat = np.maximum(arr + l1_lat,
+                                         fill if fill > -INF else 0.0) - arr
+                        trace[i_s0 - i0 + ks * ns] = np.maximum(lat, l1_lat)
+
+                done = last_resolve + fab.hbm_ns + fab.return_ns
+                if done > completion:
+                    completion = done
+
+            if collect_trace:
+                self.trace_chunks.append((fi, i0, trace))
+
+        return completion
+
+    # -- optimizations ---------------------------------------------------------
+    def _pretranslate(self, flows: List[Flow]) -> None:
+        """Paper §6.1: fused pre-translation during the preceding compute."""
+        pre = self.cfg.pretranslation
+        ns = self.cfg.fabric.stations_per_gpu
+        t = flows[0].t_start - pre.lead_time_ns
+        k = 0
+        for f in flows:
+            first_page = f.base_addr // self.page_bytes
+            last_page = (f.base_addr + f.nbytes - 1) // self.page_bytes
+            n_pages = last_page - first_page + 1
+            limit = n_pages if pre.pages_per_flow <= 0 else min(
+                n_pages, pre.pages_per_flow)
+            for j in range(limit):
+                st = (f.stripe + j) % ns
+                self.state.access(st, first_page + j,
+                                  t + k * pre.probe_issue_interval_ns,
+                                  is_probe=True)
+                self.state.counters.probes += 1
+                k += 1
+
+    def _prefetch(self, f: Flow, page: int, t: float) -> None:
+        """Paper §6.2: software-guided next-page TLB prefetch."""
+        ns = self.cfg.fabric.stations_per_gpu
+        last_page = (f.base_addr + f.nbytes - 1) // self.page_bytes
+        for j in range(1, self.cfg.prefetch.depth + 1):
+            p = page + j
+            if p > last_page:
+                break
+            st = (f.stripe + p) % ns
+            self.state.access(st, p, t, is_probe=True)
+            self.state.counters.probes += 1
+
+
+def simulate(nbytes: int, cfg: SimConfig) -> RunResult:
+    """Simulate all-pairs AllToAll of ``nbytes`` per GPU under ``cfg``."""
+    fab = cfg.fabric
+    dsts = [0] if cfg.symmetric else list(range(fab.n_gpus))
+    results: List[IterationResult] = []
+    engines = [EpochEngine(cfg, dst=d) for d in dsts]
+    t = 0.0
+    for it in range(cfg.iterations):
+        comp = 0.0
+        for eng in engines:
+            flows = _build_flows(cfg, nbytes, eng.dst, t_start=t)
+            comp = max(comp, eng.run_iteration(
+                flows, cfg.collect_trace and it == 0))
+        results.append(IterationResult(completion_ns=comp - t))
+        t = comp
+
+    # Merge counters (symmetric mode already represents one GPU; full mode
+    # aggregates every target).
+    ctr = engines[0].state.counters
+    for eng in engines[1:]:
+        c = eng.state.counters
+        ctr.requests += c.requests
+        for k in ctr.by_class:
+            ctr.by_class[k] += c.by_class[k]
+        ctr.rat_ns_sum += c.rat_ns_sum
+        ctr.rat_ns_max = max(ctr.rat_ns_max, c.rat_ns_max)
+        ctr.walks += c.walks
+        ctr.walk_mem_reads += c.walk_mem_reads
+        ctr.pwc_hits += c.pwc_hits
+        ctr.pwc_misses += c.pwc_misses
+        ctr.probes += c.probes
+
+    trace = None
+    bounds = None
+    if cfg.collect_trace:
+        eng = engines[0]
+        nflows = fab.n_gpus - 1
+        rb = fab.request_bytes
+        chunk = nbytes // fab.n_gpus
+        per_flow = max(1, math.ceil(chunk / rb))
+        trace = np.zeros(nflows * per_flow)
+        for (fi, i0, arr) in eng.trace_chunks:
+            trace[fi * per_flow + i0: fi * per_flow + i0 + len(arr)] = arr
+        bounds = [per_flow * i for i in range(nflows + 1)]
+
+    stall_mean = 0.0
+    total_reqs = sum(e.state.counters.requests for e in engines) or 1
+    stall_total = sum(e.stall_sum for e in engines)
+    stall_mean = stall_total / total_reqs
+
+    return RunResult(iterations=results, counters=ctr, config=cfg,
+                     collective_bytes=nbytes, trace=trace,
+                     trace_flow_bounds=bounds, mean_stall_ns=stall_mean)

@@ -1,0 +1,63 @@
+"""Top-level API of the Reverse Address Translation simulator.
+
+Typical use::
+
+    from repro.core import ratsim
+    r = ratsim.compare(1 << 20, n_gpus=16)       # baseline vs ideal
+    print(r.degradation, r.baseline.mean_rat_ns)
+
+All figures of the paper are produced through this module (see benchmarks/).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
+                     PreTranslationConfig, PrefetchConfig, paper_config,
+                     KB, MB, GB)
+from .engine import simulate, RunResult
+
+
+@dataclass
+class Comparison:
+    baseline: RunResult
+    ideal: RunResult
+
+    @property
+    def degradation(self) -> float:
+        """Completion-time ratio vs the zero-RAT-overhead ideal (Fig. 4)."""
+        return self.baseline.completion_ns / self.ideal.completion_ns
+
+    @property
+    def rat_fraction(self) -> float:
+        """Fraction of mean round-trip latency spent on RAT (+ induced
+        ingress stalls) — paper Fig. 6."""
+        b = self.baseline.breakdown()
+        total = sum(b.values())
+        return (b["rat_ns"] + b["stall_ns"]) / total
+
+
+def run(nbytes: int, n_gpus: int = 16, *, cfg: Optional[SimConfig] = None,
+        **cfg_kw) -> RunResult:
+    cfg = cfg or paper_config(n_gpus, **cfg_kw)
+    return simulate(nbytes, cfg)
+
+
+def compare(nbytes: int, n_gpus: int = 16, *,
+            cfg: Optional[SimConfig] = None, **cfg_kw) -> Comparison:
+    cfg = cfg or paper_config(n_gpus, **cfg_kw)
+    return Comparison(baseline=simulate(nbytes, cfg),
+                      ideal=simulate(nbytes, cfg.ideal()))
+
+
+def sweep(sizes, gpu_counts, *, base_cfg: Optional[SimConfig] = None,
+          **cfg_kw) -> Dict[tuple, Comparison]:
+    """The paper's main sweep (Figs. 4 and 5)."""
+    out = {}
+    for n in gpu_counts:
+        for s in sizes:
+            cfg = (base_cfg.replace(fabric=FabricConfig(n_gpus=n))
+                   if base_cfg is not None else paper_config(n, **cfg_kw))
+            out[(n, s)] = compare(s, n, cfg=cfg)
+    return out

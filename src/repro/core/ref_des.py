@@ -1,0 +1,134 @@
+"""Request-level reference DES for the RAT simulator (the oracle).
+
+Simulates every individual request through the same
+:class:`~repro.core.tlb.TranslationState` machinery as the page-epoch engine,
+but with explicit per-station in-order FIFOs and slot-accurate ingress
+buffering instead of closed-form epoch expansion.  Used by the test suite to
+validate :mod:`repro.core.engine` at small collective sizes; too slow for the
+paper's 4 GB sweeps (that is the point of the epoch engine).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+from .config import SimConfig
+from .engine import Flow, RunResult, IterationResult, _build_flows
+from .tlb import TranslationState
+
+
+class _StationQueue:
+    """In-order ingress FIFO of one target station with B buffer slots.
+
+    Requests are admitted in arrival order; each occupies a slot from
+    admission until its translation resolves (slots can free out of order —
+    MSHR hit-under-miss requests outlast younger already-translated ones)."""
+
+    def __init__(self, entries: int, svc_ns: float):
+        self.entries = entries
+        self.svc = svc_ns             # link-rate service spacing of the port
+        self.reqs: List[tuple] = []   # (nominal_arrival, flow_idx, page, req_idx)
+        self.ptr = 0
+        self.prev_adm = -float("inf")
+        self.retires: List[float] = []  # min-heap of outstanding retire times
+
+    def push(self, item):
+        self.reqs.append(item)
+
+    def sort(self):
+        self.reqs.sort()
+
+    def next_candidate(self) -> Optional[float]:
+        if self.ptr >= len(self.reqs):
+            return None
+        nom = self.reqs[self.ptr][0]
+        # Ingress delivers at most one request per svc (the port's line rate),
+        # so a stall can never be re-absorbed by over-rate draining.
+        adm = max(nom, self.prev_adm + self.svc)
+        if len(self.retires) >= self.entries:
+            adm = max(adm, self.retires[0])
+        return adm
+
+    def admit(self, adm: float, retire: float):
+        self.ptr += 1
+        self.prev_adm = adm
+        while self.retires and self.retires[0] <= adm:
+            heapq.heappop(self.retires)
+        heapq.heappush(self.retires, retire)
+
+
+def simulate_ref(nbytes: int, cfg: SimConfig) -> RunResult:
+    """Oracle simulation of one target GPU (symmetric all-pairs)."""
+    fab = cfg.fabric
+    rb = fab.request_bytes
+    ns = fab.stations_per_gpu
+    page_bytes = cfg.translation.page_bytes
+    state = TranslationState(cfg.translation, ns)
+    results = []
+    t_iter = 0.0
+    trace = None
+    bounds = None
+    stall_sum = 0.0
+
+    for it in range(cfg.iterations):
+        flows = _build_flows(cfg, nbytes, dst=0, t_start=t_iter)
+        svc = rb / fab.station_bw
+        stations = [_StationQueue(fab.ingress_entries, svc) for _ in range(ns)]
+        per_flow = max(1, math.ceil(flows[0].nbytes / rb))
+        collect = cfg.collect_trace and it == 0
+        if collect:
+            trace = np.zeros(len(flows) * per_flow)
+            bounds = [per_flow * i for i in range(len(flows) + 1)]
+
+        for fi, f in enumerate(flows):
+            n_req = max(1, math.ceil(f.nbytes / rb))
+            a0 = f.t_start + fab.oneway_ns
+            for i in range(n_req):
+                st = (i + f.stripe) % ns
+                page = (f.base_addr + i * rb) // page_bytes
+                stations[st].push((a0 + i * f.delta_ns, fi, page, i))
+        for st in stations:
+            st.sort()
+
+        # Global event loop in admission-time order (translation state must
+        # observe accesses in non-decreasing time).
+        heap = []
+        for si, st in enumerate(stations):
+            c = st.next_candidate()
+            if c is not None:
+                heapq.heappush(heap, (c, si))
+        completion = 0.0
+        while heap:
+            adm, si = heapq.heappop(heap)
+            st = stations[si]
+            cur = st.next_candidate()
+            if cur is None:
+                continue
+            if cur > adm + 1e-9:
+                heapq.heappush(heap, (cur, si))  # stale entry; re-key
+                continue
+            nom, fi, page, i = st.reqs[st.ptr]
+            res = state.access(si, page, cur)
+            state.counters.add_request(res.klass, res.resolve - cur)
+            state.counters.note_max(res.resolve - cur)
+            stall_sum += max(0.0, cur - nom)
+            if collect:
+                trace[fi * per_flow + i] = res.resolve - cur
+            st.admit(cur, res.resolve)
+            done = res.resolve + fab.hbm_ns + fab.return_ns
+            completion = max(completion, done)
+            c = st.next_candidate()
+            if c is not None:
+                heapq.heappush(heap, (c, si))
+
+        results.append(IterationResult(completion_ns=completion - t_iter))
+        t_iter = completion
+
+    return RunResult(iterations=results, counters=state.counters, config=cfg,
+                     collective_bytes=nbytes, trace=trace,
+                     trace_flow_bounds=bounds,
+                     mean_stall_ns=stall_sum / max(1, state.counters.requests))

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMDataset, DataIterator, make_batch_iterator
+
+__all__ = ["SyntheticLMDataset", "DataIterator", "make_batch_iterator"]

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (shannon/kernels pattern)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sm_scale: float | None = None) -> jnp.ndarray:
+    """q: [B,Sq,H,Dh]; k,v: [B,Sk,KV,Dh] -> [B,Sq,H,Dh] (GQA semantics)."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, KV, _ = k.shape
+    group = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(Dh)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, group, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * sm_scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kj = jnp.arange(Sk)[None, :]
+        s = jnp.where((kj <= qi)[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, vf)
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def grouped_matmul_ref(lhs, rhs, group_offsets) -> jnp.ndarray:
+    """lhs: [T,D] sorted by group; rhs: [E,D,F]; offsets: [E+1] -> [T,F]."""
+    T = lhs.shape[0]
+    E = rhs.shape[0]
+    rows = jnp.arange(T)
+    gid = jnp.sum(rows[:, None] >= group_offsets[None, 1:], axis=1)  # [T]
+    gid = jnp.clip(gid, 0, E - 1)
+    w = rhs[gid]                                       # [T, D, F]
+    return jnp.einsum("td,tdf->tf", lhs.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(lhs.dtype)
+
+
+def ssd_chunk_ref(x, dt, a, B, C):
+    """Intra-chunk SSD oracle.  x:[G,Q,P] dt,a:[G,Q] B,C:[G,Q,N].
+
+    Returns (y_diag [G,Q,P] f32, states [G,P,N] f32)."""
+    f32 = jnp.float32
+    x, dt, a = x.astype(f32), dt.astype(f32), a.astype(f32)
+    B, C = B.astype(f32), C.astype(f32)
+    Q = x.shape[1]
+    cs = jnp.cumsum(a, axis=1)                         # [G,Q]
+    diff = cs[:, :, None] - cs[:, None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    CB = jnp.einsum("gqn,gkn->gqk", C, B)
+    y = jnp.einsum("gqk,gk,gkp->gqp", CB * L, dt, x)
+    decay = jnp.exp(cs[:, -1:] - cs)                   # [G,Q]
+    states = jnp.einsum("gq,gq,gqp,gqn->gpn", decay, dt, x, B)
+    return y, states
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), hence no module docstring above them.
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+#
+# Proves the distribution config is coherent without hardware: 512
+# placeholder CPU devices build the production meshes; every cell must
+# jit(step).lower(...).compile() and fit v5e HBM per memory_analysis().
+# Results (memory, cost analysis, collective bytes, roofline terms) are
+# cached to results/dryrun/*.json for EXPERIMENTS.md.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+#       --shape train_4k --mesh single          # one cell
+#   PYTHONPATH=src python -m repro.launch.dryrun --all                # all
+
+import argparse
+import glob
+import json
+import pathlib
+import shutil
+import sys
+import tempfile
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from ..configs.shapes import SHAPES, shape_applicable
+from ..optim import adamw, adafactor, with_master, cosine_with_warmup
+from . import roofline as rl
+from . import specs as sp
+from .mesh import make_production_mesh
+from .steps import make_train_step, make_prefill_step, make_serve_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Microbatching (grad accumulation) and optimizer choice per size class:
+# >=100B-param models train with Adafactor + deeper accumulation.
+BIG_ARCHS = {"mistral-large-123b", "qwen3-moe-235b-a22b",
+             "jamba-1.5-large-398b"}
+HBM_PER_CHIP = 16 * 1024**3   # v5e
+
+
+def pick_optimizer(arch: str):
+    sched = cosine_with_warmup(3e-4, 100, 10_000)
+    inner = adafactor(sched) if arch in BIG_ARCHS else adamw(sched)
+    return with_master(inner)   # bf16 params + f32 master (mixed precision)
+
+
+MICROBATCHES = {  # per-arch grad-accumulation depth (train_4k)
+    "mistral-large-123b": 16,
+    "jamba-1.5-large-398b": 16,
+    "qwen3-moe-235b-a22b": 16,
+}
+
+
+def microbatches_for(arch: str, shape_name: str) -> int:
+    if shape_name != "train_4k":
+        return 1
+    return MICROBATCHES.get(arch, 4)
+
+
+SEQ_SHARD_OFF = set()  # archs where SP reshards cost more than they save
+
+
+def seq_shard_for(cfg, shape) -> bool:
+    # Sequence parallelism whenever seq divides the model axis; essential
+    # when attention heads don't shard it (e.g. 12 or 40 heads on model=16).
+    if cfg.name in SEQ_SHARD_OFF:
+        return False
+    return shape.kind in ("train", "prefill") and shape.seq_len % 16 == 0
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not shape_applicable(cfg, shape):
+        cell["status"] = "skipped"
+        cell["reason"] = ("long_500k requires sub-quadratic attention; "
+                          f"{arch} is pure full-attention (DESIGN.md)")
+        return cell
+    if shape_name == "long_500k" and cfg.sliding_window == 0 and \
+            any(k == "attn" for k in cfg.pattern):
+        cfg = cfg.replace(sliding_window=4096)   # jamba long-context variant
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with mesh:
+            if shape.kind == "train":
+                opt = pick_optimizer(arch)
+                mb = microbatches_for(arch, shape_name)
+                step, in_sh, _, (params_s, opt_s) = make_train_step(
+                    cfg, opt, mesh, multi_pod=multi_pod, microbatches=mb,
+                    seq_shard=seq_shard_for(cfg, shape))
+                batch = sp.batch_specs(cfg, shape)
+                lowered = step.lower(params_s, opt_s, batch)
+            elif shape.kind == "prefill":
+                step, in_sh, _, params_s = make_prefill_step(
+                    cfg, mesh, shape, multi_pod=multi_pod,
+                    seq_shard=seq_shard_for(cfg, shape))
+                batch = sp.batch_specs(cfg, shape)
+                batch.pop("targets", None)
+                lowered = step.lower(params_s, batch)
+            else:  # decode
+                step, in_sh, _, (params_s, cache_s) = make_serve_step(
+                    cfg, mesh, shape, multi_pod=multi_pod)
+                lowered = step.lower(params_s, sp.token_specs(shape), cache_s)
+            t_lower = time.time() - t0
+            # Dump the post-SPMD pre-float-normalization HLO: the CPU
+            # backend upcasts bf16 to f32 in the final module, which would
+            # double-count collective bytes vs the TPU target.
+            dump = tempfile.mkdtemp(prefix="hlodump_")
+            compiled = lowered.compile(compiler_options={
+                "xla_dump_to": dump,
+                "xla_dump_hlo_pass_re": "spmd-partitioning"})
+            t_compile = time.time() - t0 - t_lower
+
+        spmd_text = None
+        cands = glob.glob(dump + "/*after_spmd-partitioning*.txt")
+        if cands:
+            main = max(cands, key=lambda f: pathlib.Path(f).stat().st_size)
+            spmd_text = pathlib.Path(main).read_text()
+        shutil.rmtree(dump, ignore_errors=True)
+
+        mem = compiled.memory_analysis()
+        terms = rl.analyze(compiled, spmd_text)
+        n_devices = mesh.size
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind != "decode" else shape.global_batch)
+        n_active = configs.active_param_count(cfg)
+        if shape.kind == "train":
+            mf = rl.model_flops_train(n_active, tokens)
+        elif shape.kind == "prefill":
+            mf = rl.model_flops_train(n_active, tokens) / 3.0  # fwd only
+        else:
+            mf = rl.model_flops_decode(n_active, tokens)
+        mf_per_dev = mf / n_devices
+
+        cell.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_devices": n_devices,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_bytes": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes),
+            },
+            "fits_hbm": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes
+                         - mem.alias_size_in_bytes) < HBM_PER_CHIP,
+            "roofline": terms.as_dict(),
+            "model_flops_per_device": mf_per_dev,
+            "useful_flops_ratio": (mf_per_dev / terms.flops
+                                   if terms.flops else None),
+        })
+        if verbose:
+            r = cell["roofline"]
+            print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                  f"compile {cell['compile_s']}s, "
+                  f"peak {cell['memory']['peak_bytes']/2**30:.2f} GiB/dev "
+                  f"(fits={cell['fits_hbm']}), "
+                  f"t_comp={r['t_compute_s']:.4f}s t_mem={r['t_memory_s']:.4f}s "
+                  f"t_coll={r['t_collective_s']:.4f}s -> {r['bottleneck']}; "
+                  f"useful={cell['useful_flops_ratio'] and round(cell['useful_flops_ratio'],3)}")
+    except Exception as e:  # noqa: BLE001 — report, continue the sweep
+        cell["status"] = "error"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} x {mesh_name}: {cell['error']}")
+    return cell
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> pathlib.Path:
+    mesh = "multi" if multi_pod else "single"
+    return RESULTS / f"{arch}__{shape}__{mesh}.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true", help="ignore cache")
+    args = ap.parse_args(argv)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ([False, True] if args.mesh == "both"
+              else [args.mesh == "multi"])
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                path = cell_path(arch, shape, mp)
+                if path.exists() and not args.force:
+                    cell = json.loads(path.read_text())
+                    print(f"[cached] {arch} x {shape} x "
+                          f"{'multi' if mp else 'single'}: {cell['status']}")
+                else:
+                    cell = run_cell(arch, shape, mp)
+                    path.write_text(json.dumps(cell, indent=1))
+                if cell["status"] == "error":
+                    failures += 1
+    print(f"\ndry-run complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

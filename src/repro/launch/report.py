@@ -1,0 +1,102 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from .dryrun import RESULTS, cell_path
+from .. import configs
+from ..configs.shapes import SHAPES
+
+GIB = 2**30
+
+
+def load_cells() -> List[Dict]:
+    cells = []
+    for f in sorted(RESULTS.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def fmt_s(x: Optional[float]) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(cells: List[Dict], mesh: str = "pod_16x16") -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | "
+            "bottleneck | peak GiB/dev | fits 16G | useful FLOPs |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in configs.list_archs():
+        for shape in SHAPES:
+            c = next((c for c in cells if c["arch"] == arch
+                      and c["shape"] == shape and c["mesh"] == mesh), None)
+            if c is None:
+                continue
+            if c["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | - | - | - | skipped "
+                            f"(full attention @500k) | - | - | - |")
+                continue
+            if c["status"] != "ok":
+                rows.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            r = c["roofline"]
+            uf = c.get("useful_flops_ratio")
+            rows.append(
+                f"| {arch} | {shape} | {fmt_s(r['t_compute_s'])} | "
+                f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+                f"{r['bottleneck']} | "
+                f"{c['memory']['peak_bytes']/GIB:.2f} | "
+                f"{'yes' if c['fits_hbm'] else 'NO*'} | "
+                f"{uf:.3f} |" if uf else
+                f"| {arch} | {shape} | - | - | - | - | - | - | - |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile | peak GiB/dev | "
+            "coll GB/dev (ag/ar/rs/a2a) |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in configs.list_archs():
+        for shape in SHAPES:
+            for mesh in ("pod_16x16", "multipod_2x16x16"):
+                c = next((c for c in cells if c["arch"] == arch
+                          and c["shape"] == shape and c["mesh"] == mesh), None)
+                if c is None:
+                    continue
+                if c["status"] != "ok":
+                    rows.append(f"| {arch} | {shape} | {mesh} | "
+                                f"{c['status']} | - | - | - |")
+                    continue
+                k = c["roofline"]["coll_by_kind"]
+                coll = (f"{k.get('all-gather',0)/1e9:.1f}/"
+                        f"{k.get('all-reduce',0)/1e9:.1f}/"
+                        f"{k.get('reduce-scatter',0)/1e9:.1f}/"
+                        f"{k.get('all-to-all',0)/1e9:.2f}")
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{c['compile_s']}s | "
+                    f"{c['memory']['peak_bytes']/GIB:.2f} | {coll} |")
+    return "\n".join(rows)
+
+
+def summary(cells: List[Dict]) -> Dict:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+    fits = [c for c in ok if c.get("fits_hbm")]
+    return {"ok": len(ok), "skipped": len(skipped), "error": len(err),
+            "fits": len(fits), "total": len(cells)}
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(json.dumps(summary(cells), indent=1))
+    print()
+    print(roofline_table(cells))

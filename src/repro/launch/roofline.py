@@ -1,0 +1,155 @@
+"""Roofline-term extraction from a compiled (dry-run) step.
+
+Three terms per (arch x shape x mesh), seconds per step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / 197e12         (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9           (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9     (per-link ICI)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are NOT in cost_analysis, so we parse the post-SPMD per-device HLO text and
+sum the output shard sizes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute op (fusion-wrapped or not).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (targets; this container is CPU-only).
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device) from post-SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count the op once (-start)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: int              # per device (sum over kinds)
+    coll_by_kind: Dict[str, int] = field(default_factory=dict)
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def analyze(compiled, spmd_text: Optional[str] = None) -> RooflineTerms:
+    """Scan-aware roofline terms from a compiled step.
+
+    ``cost_analysis()`` counts while bodies once, so flops / bytes /
+    collectives come from the trip-count-aware HLO walker
+    (:mod:`repro.launch.hlo_analysis`), validated against unrolled modules
+    in tests/test_hlo_analysis.py.
+
+    ``spmd_text``: post-SPMD, pre-float-normalization HLO dump.  The CPU
+    backend upcasts bf16 math to f32 in the *final* module, which would
+    double-count collective bytes vs the real TPU lowering — when the dump
+    is available, flops + collective bytes come from it (TPU-faithful
+    dtypes) while HBM traffic and peak memory come from the final fused
+    module."""
+    from .hlo_analysis import analyze_hlo_text
+    text = compiled.as_text()
+    cost = analyze_hlo_text(text)
+    if spmd_text is not None:
+        pre = analyze_hlo_text(spmd_text)
+        cost.flops = pre.flops
+        cost.coll = pre.coll
+    mem = compiled.memory_analysis()
+    peak = None
+    if mem is not None:
+        try:
+            peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        except AttributeError:
+            peak = None
+    return RooflineTerms(flops=cost.flops, hbm_bytes=cost.mem_bytes,
+                         coll_bytes=int(cost.coll_bytes),
+                         coll_by_kind={k: int(v) for k, v in cost.coll.items()},
+                         peak_memory_bytes=peak)
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    """6*N*D forward+backward useful FLOPs."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: int, tokens: int) -> float:
+    """2*N per generated token (forward only)."""
+    return 2.0 * n_active_params * tokens

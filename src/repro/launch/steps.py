@@ -1,0 +1,194 @@
+"""Train / prefill / serve step builders with full sharding annotations.
+
+``make_train_step``: grad(+microbatch accumulation scan) -> clip -> optimizer
+update.  ``make_serve_step``: one decode token against the cache pytree.
+Each builder returns (jitted_fn, in_shardings, out_shardings, arg_shapes) so
+the dry-run can ``.lower().compile()`` from ShapeDtypeStructs alone.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import api
+from ..models.base import ModelConfig, set_logical_rules, logical_to_pspec
+from ..optim import Optimizer, clip_by_global_norm
+from ..parallel.sharding import (WorkloadKind, rules_for, param_pspecs,
+                                 batch_pspec, cache_pspecs, fit_tree)
+from ..configs.shapes import ShapeSpec
+from . import specs as sp
+
+
+def _logits_pspec(cfg: ModelConfig, rules, mesh: Mesh) -> P:
+    vshard = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    return P(rules.get("batch"), vshard)
+
+
+def _serving_dtype(params_s, cfg: ModelConfig):
+    """Serving holds bf16 weights (checkpoints are cast on load)."""
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, cfg.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params_s)
+
+
+def _batch_pspecs(cfg: ModelConfig, rules) -> Dict[str, P]:
+    out = {"inputs": batch_pspec(rules, 2), "targets": batch_pspec(rules, 2)}
+    if cfg.n_img_tokens > 0:
+        out["img_embeds"] = batch_pspec(rules, 3)
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = batch_pspec(rules, 3)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh: Mesh, *,
+                    multi_pod: bool = False, microbatches: int = 1,
+                    clip_norm: float = 1.0, seq_shard: bool = False):
+    """Returns (train_step, in_shardings, out_shardings, example_args)."""
+    rules = rules_for(WorkloadKind.TRAIN, multi_pod, seq_shard=seq_shard)
+    set_logical_rules(rules, dict(mesh.shape))
+    # Mixed precision: the model trains on bf16 working params; the f32
+    # master lives in the optimizer state (with_master).  FSDP all-gathers
+    # therefore move bf16.
+    train_cfg = cfg.replace(param_dtype=cfg.dtype)
+
+    def loss(p, b):
+        return api.loss_fn(train_cfg, p, b)
+
+    pspec_holder = {}
+
+    def _constrain_grads(g):
+        # Pin gradients to the parameter sharding so XLA emits
+        # reduce-scatters instead of full-weight f32 all-reduces.
+        pp = pspec_holder.get("p")
+        if pp is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), g, pp)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, b):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, b)
+                g = _constrain_grads(g)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                # Pin the accumulator carry too: an unconstrained scan carry
+                # settles replicated and turns per-layer grad reductions into
+                # full-weight f32 all-reduces (14 TB/step on mistral-123B).
+                gsum = _constrain_grads(gsum)
+                return (gsum, lsum + l), None
+
+            zeros = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum), _ = jax.lax.scan(acc, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            lval = lsum / microbatches
+        else:
+            (lval, _), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+            grads = _constrain_grads(grads)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": lval, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    params_s, specs, opt_s = sp.state_shapes(train_cfg, optimizer)
+    p_pspecs = param_pspecs(specs, rules)
+    # Optimizer state sharding: derive logical axes from the *logical* param
+    # specs (factored Adafactor states drop an axis), then map to the mesh.
+    o_logical = optimizer.state_specs(specs, params_s)
+    o_pspecs = jax.tree.map(
+        lambda ax: logical_to_pspec(tuple(ax), rules), o_logical,
+        is_leaf=lambda x: isinstance(x, tuple))
+    p_pspecs = fit_tree(p_pspecs, params_s, mesh)
+    o_pspecs = fit_tree(o_pspecs, opt_s, mesh)
+    pspec_holder["p"] = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), p_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+    b_pspecs = _batch_pspecs(cfg, rules)
+
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(p_pspecs), ns(o_pspecs), ns(b_pspecs))
+    out_sh = (ns(p_pspecs), ns(o_pspecs),
+              {"loss": NamedSharding(mesh, P()),
+               "grad_norm": NamedSharding(mesh, P())})
+    jitted = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    return jitted, in_sh, out_sh, (params_s, opt_s)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, *,
+                      multi_pod: bool = False, seq_shard: bool = False):
+    kind = WorkloadKind.PREFILL
+    rules = rules_for(kind, multi_pod, seq_shard=seq_shard)
+    if cfg.n_kv_heads % mesh.shape["model"] != 0:
+        # GQA kv-heads don't divide the TP axis: shard the cache on head_dim
+        # instead (otherwise a 32k cache replicates across the model axis).
+        rules["kv_heads"] = None
+        rules["head_dim"] = "model"
+    set_logical_rules(rules, dict(mesh.shape))
+    s_max = shape.seq_len + sp.DECODE_MARGIN
+
+    def prefill_step(params, batch):
+        return api.prefill(cfg, params, batch, s_max)
+
+    params_s, specs, _ = sp.state_shapes(cfg)
+    params_s = _serving_dtype(params_s, cfg)       # serve from bf16 weights
+    p_pspecs = fit_tree(param_pspecs(specs, rules), params_s, mesh)
+    b_pspecs = _batch_pspecs(cfg, rules)
+    b_pspecs.pop("targets", None)
+    cache_shapes = sp.cache_specs_shapes(cfg, shape)
+    cache_sh = fit_tree(cache_pspecs(cfg, cache_shapes, rules), cache_shapes,
+                        mesh)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(p_pspecs), ns(b_pspecs))
+    out_sh = (NamedSharding(mesh, _logits_pspec(cfg, rules, mesh)),
+              ns(cache_sh))
+    jitted = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh)
+    return jitted, in_sh, out_sh, params_s
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, *,
+                    multi_pod: bool = False):
+    """Single-token decode step against a seq_len-deep cache."""
+    kind = (WorkloadKind.LONG_DECODE if shape.global_batch == 1
+            else WorkloadKind.DECODE)
+    rules = rules_for(kind, multi_pod)
+
+    params_s, specs, _ = sp.state_shapes(cfg)
+    params_s = _serving_dtype(params_s, cfg)       # serve from bf16 weights
+    # FSDP decode of wide-FFN models: chunk the FFN so gathered weights stay
+    # bounded (all-gathers cannot be hoisted out of the chunk loop).
+    if cfg.d_ff >= 16384 and cfg.ffn_chunks == 1:
+        cfg = cfg.replace(ffn_chunks=4)
+    set_logical_rules(rules, dict(mesh.shape))
+
+    def serve_step(params, token, caches):
+        return api.decode_step(cfg, params, token, caches)
+    p_pspecs = fit_tree(param_pspecs(specs, rules), params_s, mesh)
+    cache_shapes = sp.cache_specs_shapes(cfg, shape)
+    cache_sh = fit_tree(cache_pspecs(cfg, cache_shapes, rules), cache_shapes,
+                        mesh)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(p_pspecs),
+             NamedSharding(mesh, P(rules.get("batch"))),
+             ns(cache_sh))
+    out_sh = (NamedSharding(mesh, _logits_pspec(cfg, rules, mesh)),
+              ns(cache_sh))
+    jitted = jax.jit(serve_step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    return jitted, in_sh, out_sh, (params_s, cache_shapes)

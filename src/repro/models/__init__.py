@@ -1,0 +1,6 @@
+from .base import ModelConfig, set_logical_rules, logical_to_pspec, with_logical
+from .api import init, loss_fn, forward, prefill, decode_step
+
+__all__ = ["ModelConfig", "set_logical_rules", "logical_to_pspec",
+           "with_logical", "init", "loss_fn", "forward", "prefill",
+           "decode_step"]

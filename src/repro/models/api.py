@@ -1,0 +1,45 @@
+"""Family-dispatching model API: init / loss / prefill / decode_step."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from . import transformer, encdec
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    if cfg.is_encoder_decoder:
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    if cfg.is_encoder_decoder:
+        return encdec.loss_fn(cfg, params, batch)
+    return transformer.loss_fn(cfg, params, batch)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    if cfg.is_encoder_decoder:
+        return encdec.forward(cfg, params, batch["inputs"],
+                              batch["enc_embeds"])
+    return transformer.forward(cfg, params, batch["inputs"],
+                               img_embeds=batch.get("img_embeds"))
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            s_max: int):
+    if cfg.is_encoder_decoder:
+        return encdec.prefill(cfg, params, batch["inputs"],
+                              batch["enc_embeds"], s_max)
+    return transformer.prefill(cfg, params, batch["inputs"], s_max,
+                               img_embeds=batch.get("img_embeds"))
+
+
+def decode_step(cfg: ModelConfig, params, token: jnp.ndarray, caches):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(cfg, params, token, caches)
+    return transformer.decode_step(cfg, params, token, caches)

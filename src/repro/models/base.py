@@ -1,0 +1,231 @@
+"""Parameter & logical-sharding plumbing for the pure-JAX model zoo.
+
+No flax/haiku: parameters are nested dicts of arrays.  Every leaf carries a
+tuple of *logical axis names* (in a parallel "specs" pytree) that
+:mod:`repro.parallel.sharding` maps onto physical mesh axes per workload
+(train vs prefill vs decode).  This is the MaxText-style logical-axis-rules
+pattern, implemented minimally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Model configuration shared by every architecture family.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_every: int = 1               # MoE FFN on layers where idx % every == r
+    capacity_factor: float = 1.25
+    moe_impl: str = "gather"         # "gather" (pjit auto) | "ep" (shard_map)
+    # SSM / hybrid
+    layer_pattern: Tuple[str, ...] = ()   # repeating pattern, e.g. 7x mamba + attn
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # encoder-decoder (whisper-style)
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+    # VLM (stub frontend provides patch embeddings)
+    n_img_tokens: int = 0
+    # attention extras
+    sliding_window: int = 0          # 0 = full causal
+    # execution
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    scan_layers: bool = True
+    # Chunk FFN weights over the hidden dim inside a lax.scan: bounds the
+    # number of simultaneously-gathered FSDP weight shards (XLA cannot hoist
+    # an all-gather out of a loop).  1 = unchunked.
+    ffn_chunks: int = 1
+    # Same idea for SSM layers: scan over head groups so z/x/out projection
+    # weights are gathered one group at a time.  1 = unchunked.
+    ssm_scan_groups: int = 1
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        if self.layer_pattern:
+            return self.layer_pattern
+        return ("attn",)
+
+    @property
+    def block_size(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.block_size == 0, (
+            f"{self.name}: n_layers {self.n_layers} not divisible by "
+            f"pattern period {self.block_size}")
+        return self.n_layers // self.block_size
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction: values + logical-axis specs built together.
+# ---------------------------------------------------------------------------
+
+class ParamBuilder:
+    """Builds a params pytree and the parallel logical-axes pytree."""
+
+    def __init__(self, key: jax.Array, param_dtype=jnp.float32):
+        self._key = key
+        self.dtype = param_dtype
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def normal(self, name: str, shape, axes: Tuple[Optional[str], ...],
+               stddev: Optional[float] = None, fan_in: Optional[int] = None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if stddev is None:
+            fi = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[-1]
+            stddev = 1.0 / math.sqrt(max(1, fi))
+        v = (jax.random.normal(self._next_key(), shape, self.dtype) * stddev)
+        self.params[name] = v
+        self.specs[name] = axes
+        return v
+
+    def zeros(self, name: str, shape, axes: Tuple[Optional[str], ...]):
+        self.params[name] = jnp.zeros(shape, self.dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def ones(self, name: str, shape, axes: Tuple[Optional[str], ...]):
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.specs[name] = axes
+        return self.params[name]
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._next_key(), self.dtype)
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        return sub
+
+    def done(self):
+        return self.params, self.specs
+
+
+def stack_layer_params(per_layer: list):
+    """Stack a list of per-layer param trees into leading-[L] arrays."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def stacked_specs(specs, prefix: str = "layers"):
+    """Prepend the 'layers' logical axis to every spec leaf (never sharded)."""
+    return jax.tree.map(
+        lambda ax: ("layers",) + tuple(ax),
+        specs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding constraint helper (no-op outside a mesh context).
+# ---------------------------------------------------------------------------
+
+_LOGICAL_RULES: Optional[Dict[str, Any]] = None
+_AXIS_SIZES: Optional[Dict[str, int]] = None
+
+
+def set_logical_rules(rules: Optional[Dict[str, Any]],
+                      axis_sizes: Optional[Dict[str, int]] = None):
+    """Install logical->mesh axis rules for with_logical_constraint.
+
+    ``axis_sizes`` (mesh axis -> size) lets with_logical drop constraints on
+    dimensions the axis does not divide instead of failing wholesale."""
+    global _LOGICAL_RULES, _AXIS_SIZES
+    _LOGICAL_RULES = rules
+    _AXIS_SIZES = axis_sizes
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a physical mesh axis under the installed rules (1 if unknown)."""
+    if _AXIS_SIZES is None:
+        return 1
+    return _AXIS_SIZES.get(name, 1)
+
+
+def logical_to_pspec(axes, rules=None) -> jax.sharding.PartitionSpec:
+    rules = rules if rules is not None else (_LOGICAL_RULES or {})
+    parts = []
+    used = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        # A physical mesh axis may appear at most once in a PartitionSpec.
+        if m is not None:
+            key = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+            if any(k in used for k in key):
+                m = None
+            else:
+                used.update(key)
+        parts.append(m)
+    return jax.sharding.PartitionSpec(*parts)
+
+
+def with_logical(x: jnp.ndarray, axes: Tuple[Optional[str], ...],
+                 partial: bool = False):
+    """Sharding constraint by logical axes; identity if no rules installed.
+
+    When a mapped mesh axis does not divide its dimension, the default is to
+    skip the whole constraint (forcing a *weaker* sharding than propagation
+    would find is usually a pessimization — e.g. a 49155-vocab logits tensor
+    pinned vocab-replicated).  ``partial=True`` instead drops only the
+    offending dims and applies the rest (used where a partial pin is the
+    point, e.g. the grouped-attention reshape)."""
+    if _LOGICAL_RULES is None:
+        return x
+    spec = logical_to_pspec(axes)
+    if _AXIS_SIZES is not None:
+        parts = []
+        dropped = False
+        for dim, part in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+            if part is not None:
+                names = part if isinstance(part, (tuple, list)) else (part,)
+                n = 1
+                for a in names:
+                    n *= _AXIS_SIZES.get(a, 1)
+                if n == 0 or dim % n != 0:
+                    part = None
+                    dropped = True
+            parts.append(part)
+        if dropped and not partial:
+            return x
+        spec = jax.sharding.PartitionSpec(*parts)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # outside mesh context (e.g. plain CPU smoke tests)

@@ -1,0 +1,215 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, two execution paths.
+
+``moe_gather``  — scatter/gather dispatch + batched expert einsum.  Pure data
+                  movement for dispatch (no one-hot einsum FLOP inflation),
+                  shardable under plain pjit: experts are sharded on the
+                  "experts" logical axis and GSPMD inserts the (all-to-all
+                  equivalent) collectives.  Used by train/dry-run steps.
+
+``moe_block_ep`` — explicit expert parallelism for ``shard_map`` contexts:
+                  tokens are exchanged with ``lax.all_to_all`` over the model
+                  axis — the *exact* collective the paper studies — and the
+                  dispatch collective can be scheduled with the
+                  translation-aware warm-up plan (repro.core.overlap).
+
+Both paths share routing; both drop tokens beyond capacity (GShard-style)
+with residual passthrough.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .base import ModelConfig, ParamBuilder, with_logical
+
+
+def init_moe(b: ParamBuilder, cfg: ModelConfig, name: str = "moe"):
+    m = b.child(name)
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    m.normal("router", (D, E), ("embed", None), fan_in=D)
+    m.normal("wi_gate", (E, D, F), ("experts", "expert_embed", "expert_mlp"),
+             fan_in=D)
+    m.normal("wi_up", (E, D, F), ("experts", "expert_embed", "expert_mlp"),
+             fan_in=D)
+    m.normal("wo", (E, F, D), ("experts", "expert_mlp", "expert_embed"),
+             fan_in=F)
+
+
+def route(p, cfg: ModelConfig, x_flat: jnp.ndarray):
+    """Top-k routing in fp32.  Returns (idx [T,k], weights [T,k], aux_loss)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)         # renormalize over top-k
+    # Switch-style load-balance auxiliary loss.
+    T, E = logits.shape
+    me = jnp.mean(probs, axis=0)                       # mean router prob / expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) / cfg.top_k
+    return idx, w.astype(x_flat.dtype), aux
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, c)
+
+
+def _expert_ffn(p, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [E, C, D] -> [E, C, D] batched SwiGLU over experts."""
+    g = jnp.einsum("ecd,edf->ecf", x, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = with_logical(h, ("experts", None, "expert_mlp"))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+
+
+def moe_gather(p, cfg: ModelConfig, x: jnp.ndarray):
+    """MoE FFN for [B,S,D] input under pjit auto-sharding.
+
+    Dispatch is **per batch row** (capacity enforced per sequence): the
+    scatter/gather never crosses the batch dimension, so every tensor stays
+    naturally (batch x expert)-sharded — GSPMD inserts only the expert-axis
+    exchange (the all-to-all the paper prices), never a global token
+    reshuffle (which it implements as replicate-then-partition and blows
+    per-device memory)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)
+
+    # routing (fp32) on [B,S,E]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, k)                       # [B,S,k]
+    w = (w / jnp.sum(w, axis=-1, keepdims=True)).astype(x.dtype)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / k
+
+    a = idx.reshape(B, S * k)                          # [B, S*k] expert ids
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)     # [B, S*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos, a[..., None], axis=2)[..., 0]
+    keep = pos < C
+    safe_a = jnp.where(keep, a, 0)
+    safe_pos = jnp.where(keep, pos, C - 1)
+    xr = jnp.broadcast_to(x[:, :, None, :], (B, S, k, D)).reshape(B, S * k, D)
+    xr = jnp.where(keep[..., None], xr, 0).astype(x.dtype)
+
+    def disp(xr_row, a_row, pos_row):
+        return jnp.zeros((E, C, D), x.dtype).at[a_row, pos_row].add(xr_row)
+
+    buf = jax.vmap(disp)(xr, safe_a, safe_pos)         # [B, E, C, D]
+    buf = with_logical(buf, ("batch", "experts", None, None))
+
+    F = p["wi_gate"].shape[-1]
+    nch = cfg.ffn_chunks if (cfg.ffn_chunks > 1 and F % cfg.ffn_chunks == 0) else 1
+    if nch == 1:
+        g = jnp.einsum("becd,edf->becf", buf, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("becd,edf->becf", buf, p["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+        h = with_logical(h, ("batch", "experts", None, "expert_mlp"))
+        out_e = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+    else:
+        # F-chunked expert FFN (scan): bounds simultaneously-gathered
+        # expert-weight shards (all-gathers cannot be hoisted out of loops).
+        fc = F // nch
+        wg = p["wi_gate"].reshape(E, D, nch, fc).transpose(2, 0, 1, 3)
+        wu = p["wi_up"].reshape(E, D, nch, fc).transpose(2, 0, 1, 3)
+        wo = p["wo"].reshape(E, nch, fc, D).transpose(1, 0, 2, 3)
+
+        def step(acc, ws):
+            g_, u_, o_ = ws
+            h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf,
+                                       g_.astype(x.dtype))) \
+                * jnp.einsum("becd,edf->becf", buf, u_.astype(x.dtype))
+            h = with_logical(h, ("batch", "experts", None, "expert_mlp"))
+            return acc + jnp.einsum("becf,efd->becd", h,
+                                    o_.astype(x.dtype)), None
+
+        out_e, _ = lax.scan(step, jnp.zeros_like(buf), (wg, wu, wo))
+    out_e = with_logical(out_e, ("batch", "experts", None, None))
+
+    gathered = jax.vmap(lambda o, a_r, p_r: o[a_r, p_r])(
+        out_e, safe_a, safe_pos)                       # [B, S*k, D]
+    # Combine lands in the sequence-parallel layout: the cross-expert-shard
+    # reduction becomes a reduce-scatter into [B, S*k/TP, D] instead of a
+    # full all-reduce of [B, S*k, D] (granite train: -31% collective bytes).
+    gathered = with_logical(gathered, ("batch", "seq", None))
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    y = (gathered.reshape(B, S, k, D) * w[..., None]).sum(axis=2)
+    return y, aux
+
+
+def moe_block_ep(p, cfg: ModelConfig, x: jnp.ndarray, axis_name: str,
+                 plan=None, overlap_compute=None):
+    """Expert-parallel MoE inside ``shard_map`` over ``axis_name``.
+
+    ``x``: [T_loc, D] local tokens.  Experts are sharded: this shard holds
+    ``E / axis_size`` of them (p's leaves are the local slices).  Dispatch
+    and combine are explicit ``lax.all_to_all`` — the collective the paper
+    analyzes — optionally scheduled with a warm-up chunk plan.
+    """
+    from ..core.overlap import scheduled_all_to_all
+
+    ep = lax.psum(1, axis_name)
+    T, D = x.shape
+    idx, w, aux = route(p, cfg, x)                     # router is replicated
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // ep
+    C = _capacity(cfg, T) * E_loc                      # capacity per shard
+
+    a = idx.reshape(-1)                                # [T*k] global expert id
+    shard = a // E_loc                                 # destination shard
+    # position within destination shard's receive slot for this source
+    onehot = jax.nn.one_hot(shard, ep, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos, shard[:, None], axis=1)[:, 0]
+    keep = pos < C
+    safe_shard = jnp.where(keep, shard, 0)
+    safe_pos = jnp.where(keep, pos, C - 1)
+
+    xr = jnp.repeat(x, k, axis=0)
+    send = jnp.zeros((ep, C, D), x.dtype)
+    send = send.at[safe_shard, safe_pos].add(
+        jnp.where(keep[:, None], xr, 0).astype(x.dtype))
+    send_meta = jnp.zeros((ep, C), jnp.int32)
+    send_meta = send_meta.at[safe_shard, safe_pos].add(
+        jnp.where(keep, a % E_loc + 1, 0))             # 0 = empty slot
+
+    # ---- dispatch all-to-all (optionally warm-up-scheduled) -------------
+    if plan is not None and overlap_compute is not None:
+        recv, _ = scheduled_all_to_all(send, axis_name, plan,
+                                       compute_fn=overlap_compute[0],
+                                       compute_arg=overlap_compute[1])
+    else:
+        recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+    recv_meta = lax.all_to_all(send_meta, axis_name, split_axis=0,
+                               concat_axis=0, tiled=True)
+
+    # ---- local expert compute (masked batched FFN over local experts) ---
+    recv_flat = recv.reshape(ep * C, D)
+    eid = (recv_meta.reshape(-1) - 1)                  # -1 = empty
+    buf = jnp.zeros((E_loc, ep * C, D), x.dtype)
+    sel = jax.nn.one_hot(eid, E_loc, dtype=x.dtype)    # [ep*C, E_loc]
+    buf = jnp.einsum("te,td->etd", sel, recv_flat)
+    g = jnp.einsum("etd,edf->etf", buf, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("etd,edf->etf", buf, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    out_local = jnp.einsum("etf,efd->etd", h, p["wo"].astype(x.dtype))
+    out_flat = jnp.einsum("etd,te->td", out_local, sel)
+
+    # ---- combine all-to-all back ----------------------------------------
+    back = lax.all_to_all(out_flat.reshape(ep, C, D), axis_name,
+                          split_axis=0, concat_axis=0, tiled=True)
+    gathered = back[safe_shard, safe_pos]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(T, k, D) * w[..., None].astype(x.dtype)).sum(axis=1)
+    return y, aux

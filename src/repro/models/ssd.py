@@ -1,0 +1,281 @@
+"""Mamba2 SSD (state-space duality) layer: chunked train scan + decode step.
+
+Follows the SSD reference recurrence (Dao & Gu, 2024): per head h with scalar
+decay a_t = -exp(A_log)*dt_t,
+
+    S_t = exp(a_t) * S_{t-1} + dt_t * x_t B_t^T          (state [P, N])
+    y_t = C_t S_t + D * x_t
+
+Training uses the chunked algorithm: quadratic attention-like form within
+chunks of length Q, associative recurrence across chunk states.  The chunk
+inner loop is the compute hot-spot that :mod:`repro.kernels.ssd_scan`
+implements as a Pallas TPU kernel; this module is the pure-jnp path (and the
+kernel's oracle lives in ``kernels/ref.py`` mirroring this math).
+
+Sharding note: the projections for z / x / B / C / dt are SEPARATE weight
+matrices (not one fused in_proj).  A fused projection would be split at
+boundaries that are not multiples of the model-axis shard size, which forces
+GSPMD to all-gather the full [d_model, 2*d_inner+2N+H] weight every layer
+(observed: +30 GiB/device on jamba-398B).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .base import ModelConfig, ParamBuilder, with_logical
+from .layers import rmsnorm
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # [B, K-1, d_inner + 2N] raw conv inputs (x|B|C)
+    state: jnp.ndarray  # [B, H, P, N] SSM state
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_ssm(b: ParamBuilder, cfg: ModelConfig, name: str = "ssm"):
+    s = b.child(name)
+    D = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    s.normal("z_proj", (D, d_inner), ("embed", "ssm_inner"), fan_in=D)
+    s.normal("x_proj", (D, d_inner), ("embed", "ssm_inner"), fan_in=D)
+    s.normal("b_proj", (D, N), ("embed", None), fan_in=D)
+    s.normal("c_proj", (D, N), ("embed", None), fan_in=D)
+    s.normal("dt_proj", (D, H), ("embed", None), fan_in=D)
+    s.normal("conv_x", (cfg.ssm_conv, d_inner), (None, "ssm_inner"),
+             stddev=0.5)
+    s.zeros("conv_x_b", (d_inner,), ("ssm_inner",))
+    s.normal("conv_b", (cfg.ssm_conv, N), (None, None), stddev=0.5)
+    s.zeros("conv_b_b", (N,), (None,))
+    s.normal("conv_c", (cfg.ssm_conv, N), (None, None), stddev=0.5)
+    s.zeros("conv_c_b", (N,), (None,))
+    s.normal("A_log", (H,), (None,), stddev=0.1)
+    s.zeros("D", (H,), (None,))
+    s.zeros("dt_bias", (H,), (None,))
+    s.ones("norm", (d_inner,), ("ssm_inner",))
+    s.normal("out_proj", (d_inner, D), ("ssm_inner", "embed"), fan_in=d_inner)
+
+
+def _proj_streams(p, cfg: ModelConfig, x: jnp.ndarray):
+    """x: [B,S,D] -> (z, xs_raw, B_raw, C_raw, dt_raw) pre-conv streams."""
+    dt = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["z_proj"].astype(dt))
+    xs = jnp.einsum("bsd,de->bse", x, p["x_proj"].astype(dt))
+    Br = jnp.einsum("bsd,dn->bsn", x, p["b_proj"].astype(dt))
+    Cr = jnp.einsum("bsd,dn->bsn", x, p["c_proj"].astype(dt))
+    dtr = jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(dt))
+    return z, xs, Br, Cr, dtr
+
+
+def _conv1d(seq: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+            prev: jnp.ndarray = None) -> jnp.ndarray:
+    """Causal depthwise conv + SiLU.  seq: [B,S,C]; w: [K,C]; prev [B,K-1,C]."""
+    K = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = prev.astype(seq.dtype)
+    xp = jnp.concatenate([pad, seq], axis=1)
+    wc = w.astype(seq.dtype)
+    out = sum(xp[:, i:i + seq.shape[1]] * wc[i] for i in range(K))
+    return jax.nn.silu(out + bias.astype(seq.dtype))
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: [..., Q] -> lower-triangular pairwise sums L[i,j] = sum_{j<k<=i} a_k."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # [..., Q, Q]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan.  x:[b,S,H,P] dt:[b,S,H] A:[H] B,C:[b,S,N] (single group).
+
+    Returns y [b,S,H,P] and final state [b,H,P,N].  fp32 internals.
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(b, nc, Q, H).astype(f32)
+    Bc = B.reshape(b, nc, Q, N).astype(f32)
+    Cc = C.reshape(b, nc, Q, N).astype(f32)
+    a = dtc * (-jnp.exp(A.astype(f32)))               # [b,nc,Q,H] (negative)
+
+    # Intra-chunk (quadratic) term.
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))     # [b,nc,H,Q,Q]
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)        # [b,nc,Q,Q]
+    M = CB[:, :, None] * L                            # [b,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtc, xc)
+
+    # Chunk states: S_c = sum_k exp(A_end - A_k) dt_k x_k B_k^T.
+    a_cum = jnp.cumsum(a, axis=2)                     # [b,nc,Q,H]
+    a_end = a_cum[:, :, -1:]                          # [b,nc,1,H]
+    decay = jnp.exp(a_end - a_cum)                    # [b,nc,Q,H]
+    states = jnp.einsum("bcqh,bcqh,bcqhp,bcqn->bchpn",
+                        decay, dtc, xc, Bc)           # [b,nc,H,P,N]
+
+    # Inter-chunk recurrence over chunk states (associative scan).
+    g = jnp.exp(a_end[:, :, 0])                       # [b,nc,H] chunk decay
+
+    def combine(c1, c2):
+        g1, s1 = c1
+        g2, s2 = c2
+        return g1 * g2, s2 + g2[..., None, None] * s1
+
+    gs, ss = lax.associative_scan(combine, (g, states), axis=1)
+    # state entering chunk c = ss[c-1]; entering chunk 0 = 0.
+    prev = jnp.concatenate([jnp.zeros_like(ss[:, :1]), ss[:, :-1]], axis=1)
+
+    # Off-diagonal contribution: y += C_t exp(a_cum_t) S_prev.
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       Cc, jnp.exp(a_cum), prev)
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, ss[:, -1]                               # final state [b,H,P,N]
+
+
+def _core(p, cfg: ModelConfig, x, want_cache: bool):
+    d_inner, H, P, N = ssm_dims(cfg)
+    b, S, _ = x.shape
+    G = cfg.ssm_scan_groups if (cfg.ssm_scan_groups > 1
+                                and H % cfg.ssm_scan_groups == 0) else 1
+    dt_x = x.dtype
+    # Shared (small) streams.
+    Br = jnp.einsum("bsd,dn->bsn", x, p["b_proj"].astype(dt_x))
+    Cr = jnp.einsum("bsd,dn->bsn", x, p["c_proj"].astype(dt_x))
+    dtr = jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(dt_x))
+    B = _conv1d(Br, p["conv_b"], p["conv_b_b"])
+    C = _conv1d(Cr, p["conv_c"], p["conv_c_b"])
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    D_ = x.shape[-1]
+
+    if G == 1:
+        z = jnp.einsum("bsd,de->bse", x, p["z_proj"].astype(dt_x))
+        xs_raw = jnp.einsum("bsd,de->bse", x, p["x_proj"].astype(dt_x))
+        xs = _conv1d(xs_raw, p["conv_x"], p["conv_x_b"])
+        xs = with_logical(xs, ("batch", "seq", "ssm_inner"))
+        y, state = ssd_chunked(xs.reshape(b, S, H, P), dt, p["A_log"], B, C,
+                               cfg.ssm_chunk)
+        y = y + (p["D"].astype(jnp.float32))[None, None, :, None] \
+            * xs.reshape(b, S, H, P).astype(jnp.float32)
+        y = y.reshape(b, S, d_inner).astype(dt_x)
+        y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_x))
+    else:
+        # Head-group-chunked SSM: one group's z/x/out weights gathered at a
+        # time (lax.scan bodies cannot have their all-gathers hoisted).
+        dg, Hg = d_inner // G, H // G
+        wz = p["z_proj"].reshape(D_, G, dg).swapaxes(0, 1)    # [G, D, dg]
+        wx = p["x_proj"].reshape(D_, G, dg).swapaxes(0, 1)
+        cx = p["conv_x"].reshape(cfg.ssm_conv, G, dg).swapaxes(0, 1)
+        cxb = p["conv_x_b"].reshape(G, dg)
+        A_g = p["A_log"].reshape(G, Hg)
+        Dg_ = p["D"].reshape(G, Hg)
+        dt_g = dt.reshape(b, S, G, Hg)
+
+        def grp(carry, ws):
+            wz_, wx_, cx_, cxb_, A_, D__, dtg_ = ws
+            z_ = jnp.einsum("bsd,de->bse", x, wz_.astype(dt_x))
+            xr_ = jnp.einsum("bsd,de->bse", x, wx_.astype(dt_x))
+            xs_ = _conv1d(xr_, cx_, cxb_)
+            yg, st = ssd_chunked(xs_.reshape(b, S, Hg, P), dtg_, A_, B, C,
+                                 cfg.ssm_chunk)
+            yg = yg + D__.astype(jnp.float32)[None, None, :, None] \
+                * xs_.reshape(b, S, Hg, P).astype(jnp.float32)
+            return carry, (yg.reshape(b, S, dg).astype(dt_x),
+                           z_, st, xr_)
+
+        _, (ys, zs, sts, xrs) = lax.scan(
+            grp, 0, (wz, wx, cx, cxb, A_g, Dg_,
+                     dt_g.transpose(2, 0, 1, 3)))
+        y = jnp.concatenate(list(ys), axis=-1)                # [b,S,d_inner]
+        z = jnp.concatenate(list(zs), axis=-1)
+        state = jnp.concatenate(list(sts), axis=1)            # [b,H,P,N]
+        xs_raw = jnp.concatenate(list(xrs), axis=-1)
+        y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+        wo = p["out_proj"].reshape(G, dg, D_)
+        yg = y.reshape(b, S, G, dg).transpose(2, 0, 1, 3)
+
+        def oproj(acc, ws):
+            yg_, wo_ = ws
+            return acc + jnp.einsum("bse,ed->bsd", yg_, wo_.astype(dt_x)), None
+
+        out, _ = lax.scan(oproj, jnp.zeros_like(x), (yg, wo))
+
+    out = with_logical(out, ("batch", "seq", "embed"))
+    if not want_cache:
+        return out, None
+    if G > 1:
+        pass  # xs_raw already assembled above
+    else:
+        pass
+    K = cfg.ssm_conv
+    raw = jnp.concatenate([xs_raw, Br, Cr], axis=-1)
+    tail = raw[:, -(K - 1):, :]
+    if S < K - 1:
+        tail = jnp.pad(raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    cache = SSMCache(conv=tail.astype(cfg.dtype),
+                     state=state.astype(jnp.float32))
+    return out, cache
+
+
+def ssm_layer(p, cfg: ModelConfig, x: jnp.ndarray):
+    """Full-sequence Mamba2 layer.  x: [B,S,D] -> [B,S,D]."""
+    out, _ = _core(p, cfg, x, want_cache=False)
+    return out
+
+
+def ssm_prefill(p, cfg: ModelConfig, x: jnp.ndarray):
+    """Like ssm_layer but also returns the decode cache."""
+    return _core(p, cfg, x, want_cache=True)
+
+
+def ssm_decode(p, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache):
+    """Single-token decode.  x: [B,1,D]."""
+    d_inner, H, P, N = ssm_dims(cfg)
+    b = x.shape[0]
+    K = cfg.ssm_conv
+    z, xs_raw, B_raw, C_raw, dt_raw = _proj_streams(p, cfg, x)
+    raw = jnp.concatenate([xs_raw, B_raw, C_raw], axis=-1)    # [B,1,di+2N]
+    conv_in = jnp.concatenate([cache.conv.astype(x.dtype), raw], axis=1)
+
+    def one(stream, w, bias):
+        wc = w.astype(x.dtype)
+        o = sum(stream[:, i:i + 1] * wc[i] for i in range(K))
+        return jax.nn.silu(o + bias.astype(x.dtype))
+
+    xs = one(conv_in[..., :d_inner], p["conv_x"], p["conv_x_b"])
+    Bs = one(conv_in[..., d_inner:d_inner + N], p["conv_b"], p["conv_b_b"])
+    Cs = one(conv_in[..., d_inner + N:], p["conv_c"], p["conv_c_b"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    a = dt * (-jnp.exp(p["A_log"].astype(jnp.float32)))             # [B,H]
+    xh = xs.reshape(b, H, P).astype(jnp.float32)
+    Bf = Bs[:, 0].astype(jnp.float32)                               # [B,N]
+    Cf = Cs[:, 0].astype(jnp.float32)
+    new_state = (jnp.exp(a)[..., None, None] * cache.state
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf))
+    y = jnp.einsum("bn,bhpn->bhp", Cf, new_state) \
+        + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, SSMCache(conv=conv_in[:, 1:].astype(cfg.dtype),
+                         state=new_state)

@@ -1,0 +1,6 @@
+from .optimizers import (adamw, adafactor, with_master, Optimizer,
+                         global_norm, clip_by_global_norm)
+from .schedules import cosine_with_warmup
+
+__all__ = ["adamw", "adafactor", "with_master", "Optimizer", "global_norm",
+           "clip_by_global_norm", "cosine_with_warmup"]

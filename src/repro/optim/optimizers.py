@@ -1,0 +1,172 @@
+"""Sharded optimizers in pure JAX: AdamW and Adafactor.
+
+Optimizer state mirrors parameter sharding (`state_specs` derives the
+logical-axis pytree for the state from the parameter specs), giving
+ZeRO-style fully-sharded optimizer state for free under pjit.
+
+Adafactor (factored second moment) is the default for the >100 B-parameter
+architectures: state is O(rows + cols) instead of O(rows x cols), which is
+what lets mistral-123B / qwen3-moe-235B / jamba-398B fit a 256-chip v5e pod
+(see DESIGN.md §5 and the dry-run memory analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def with_master(inner: "Optimizer", master_dtype=jnp.float32) -> "Optimizer":
+    """Mixed precision: bf16 working params, f32 master copy in the state.
+
+    The model/collectives see bf16 weights (halving FSDP all-gather volume);
+    the update applies to the f32 master and re-casts.  Standard MaxText /
+    Megatron mixed-precision layout."""
+
+    def init(params):
+        master = jax.tree.map(
+            lambda p: p.astype(master_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        return {"master": master, "inner": inner.init(master)}
+
+    def update(grads, state, params, _step=None):
+        grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_master, new_inner = inner.update(grads32, state["inner"],
+                                             state["master"])
+        new_params = jax.tree.map(
+            lambda m, p: m.astype(p.dtype), new_master, params)
+        return new_params, {"master": new_master, "inner": new_inner}
+
+    def state_specs(param_specs, param_shapes):
+        return {"master": param_specs,
+                "inner": inner.state_specs(param_specs, param_shapes)}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # (param logical specs, param shape pytree) -> state logical specs
+    state_specs: Callable[[Any, Any], Any]
+
+
+# --------------------------------------------------------------------- AdamW
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step=None):
+        count = state["count"] + 1
+        lr = schedule(count)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return new_p.astype(p.dtype), m_new.astype(state_dtype), \
+                v_new.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    def state_specs(param_specs, param_shapes=None):
+        return {"m": param_specs, "v": param_specs, "count": ()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+# ----------------------------------------------------------------- Adafactor
+def adafactor(schedule, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    """Adafactor (Shazeer & Stern) with factored 2nd moment for big matrices."""
+
+    def _factored(p) -> bool:
+        return (p.ndim >= 2
+                and p.shape[-1] >= min_dim_size_to_factor
+                and p.shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step=None):
+        count = state["count"] + 1
+        lr = schedule(count)
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(nv["v"] + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr * u
+                     - lr * weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"v": new_v, "count": count}
+
+    def state_specs(param_specs, param_shapes):
+        def one(spec, p):
+            spec = tuple(spec)
+            if _factored(p):
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+        return {"v": jax.tree.map(one, param_specs, param_shapes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "count": ()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)

@@ -1,0 +1,5 @@
+from .sharding import (rules_for, param_pspecs, batch_pspec, cache_pspecs,
+                       make_shardings, WorkloadKind)
+
+__all__ = ["rules_for", "param_pspecs", "batch_pspec", "cache_pspecs",
+           "make_shardings", "WorkloadKind"]

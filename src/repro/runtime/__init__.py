@@ -1,0 +1,6 @@
+from .compression import compress_gradients, CompressionState, make_compressor
+from .elastic import ElasticController, HostState
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["compress_gradients", "CompressionState", "make_compressor",
+           "ElasticController", "HostState", "Trainer", "TrainerConfig"]

@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod reduction, with error feedback.
+
+At 512+ chips the inter-pod gradient all-reduce crosses the slow (DCN/
+inter-pod) boundary; compressing it is the classic distributed-optimization
+trick.  Two codecs:
+
+  * ``bf16``: round grads to bf16 before the reduction (2x);
+  * ``int8``: per-tensor absmax int8 quantization (4x) with **error
+    feedback** — the quantization residual is carried to the next step so
+    the bias does not accumulate (Seide et al.; convergence-parity tested in
+    tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any   # pytree of residuals (None when codec has no feedback)
+
+
+def _quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_gradients(grads, codec: str = "none",
+                       state: Optional[CompressionState] = None):
+    """Returns (decompressed-after-transport grads, new state).
+
+    The compress->transport->decompress round trip is materialized locally
+    (the actual collective rides XLA's all-reduce on the compressed dtype);
+    the numerics here are exactly what the wire would carry.
+    """
+    if codec == "none":
+        return grads, state
+
+    if codec == "bf16":
+        out = jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        return out, state
+
+    if codec == "int8":
+        err = (state.error if state is not None and state.error is not None
+               else jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                 grads))
+
+        def one(g, e):
+            g32 = g.astype(jnp.float32) + e
+            q, scale = _quantize_int8(g32)
+            deq = q.astype(jnp.float32) * scale
+            return deq.astype(g.dtype), (g32 - deq)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(err)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        new_g = tdef.unflatten([o[0] for o in outs])
+        new_e = tdef.unflatten([o[1] for o in outs])
+        return new_g, CompressionState(error=new_e)
+
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def make_compressor(codec: str):
+    def init(grads):
+        if codec == "int8":
+            return CompressionState(error=jax.tree.map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads))
+        return CompressionState(error=None)
+
+    def apply(grads, state):
+        return compress_gradients(grads, codec, state)
+
+    return init, apply

@@ -1,0 +1,96 @@
+"""Elastic scaling + straggler mitigation control plane (host-side logic).
+
+On a real cluster this wraps the coordination service; offline, the same
+state machine is driven by simulated heartbeats so the policy logic —
+detection thresholds, re-mesh decisions, shard reassignment — is tested for
+real.  The data plane it drives is:
+
+  * re-mesh: rebuild the device mesh with fewer/more data-parallel replicas;
+  * re-shard: checkpoints store logical arrays, so any topology restores
+    (repro.checkpoint); the data iterator reshards deterministically
+    (repro.data.DataIterator.reshard);
+  * stragglers: deterministic per-step data assignment means a replacement
+    host recomputes exactly the lost shard — no reshuffle of the stream.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class HostState:
+    host_id: int
+    last_heartbeat: float
+    step_times: List[float] = field(default_factory=list)
+    alive: bool = True
+
+    def note_step(self, seconds: float) -> None:
+        self.step_times.append(seconds)
+        if len(self.step_times) > 32:
+            self.step_times.pop(0)
+
+    @property
+    def mean_step(self) -> float:
+        return (sum(self.step_times) / len(self.step_times)
+                if self.step_times else 0.0)
+
+
+@dataclass
+class ElasticDecision:
+    kind: str            # "ok" | "remesh" | "replace_straggler"
+    dead_hosts: Tuple[int, ...] = ()
+    stragglers: Tuple[int, ...] = ()
+    new_num_shards: Optional[int] = None
+
+
+class ElasticController:
+    """Failure detection + re-mesh policy over host heartbeats."""
+
+    def __init__(self, n_hosts: int, *, heartbeat_timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0,
+                 min_hosts: int = 1, clock=time.monotonic):
+        self.clock = clock
+        self.timeout = heartbeat_timeout_s
+        self.straggler_factor = straggler_factor
+        self.min_hosts = min_hosts
+        now = self.clock()
+        self.hosts: Dict[int, HostState] = {
+            i: HostState(i, now) for i in range(n_hosts)}
+
+    def heartbeat(self, host_id: int, step_seconds: Optional[float] = None):
+        h = self.hosts[host_id]
+        h.last_heartbeat = self.clock()
+        h.alive = True
+        if step_seconds is not None:
+            h.note_step(step_seconds)
+
+    def poll(self) -> ElasticDecision:
+        now = self.clock()
+        dead = tuple(h.host_id for h in self.hosts.values()
+                     if h.alive and now - h.last_heartbeat > self.timeout)
+        for hid in dead:
+            self.hosts[hid].alive = False
+        alive = [h for h in self.hosts.values() if h.alive]
+        if dead:
+            n = len(alive)
+            # largest power-of-two data-parallel degree that still works
+            shards = 1
+            while shards * 2 <= n:
+                shards *= 2
+            if n < self.min_hosts:
+                raise RuntimeError("below minimum healthy host count")
+            return ElasticDecision(kind="remesh", dead_hosts=dead,
+                                   new_num_shards=shards)
+        # Straggler: sustained mean step time >> fleet median.
+        times = sorted(h.mean_step for h in alive if h.step_times)
+        if len(times) >= 4:
+            median = times[len(times) // 2]
+            strag = tuple(h.host_id for h in alive
+                          if h.step_times
+                          and h.mean_step > self.straggler_factor * median)
+            if strag:
+                return ElasticDecision(kind="replace_straggler",
+                                       stragglers=strag)
+        return ElasticDecision(kind="ok")

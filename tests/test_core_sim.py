@@ -1,0 +1,313 @@
+"""Tests for the Reverse Address Translation simulator (repro.core)."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ratsim, paper_config, simulate, simulate_ref,
+                        KB, MB, GB)
+from repro.core.config import (FabricConfig, TranslationConfig, TLBConfig,
+                               PreTranslationConfig, PrefetchConfig)
+from repro.core.tlb import LRUCache, PTWPool, TranslationState, CLASSES
+from repro.core.cost_model import CostModel
+from repro.core.scheduler import TranslationAwareScheduler
+
+
+# ---------------------------------------------------------------- unit: LRU
+class TestLRUCache:
+    def test_hit_after_fill(self):
+        c = LRUCache(entries=4, assoc=0)
+        assert not c.lookup("a", t=0.0)
+        c.fill("a", fill_time=10.0)
+        assert not c.lookup("a", t=5.0)   # fill not landed yet
+        assert c.lookup("a", t=10.0)
+
+    def test_lru_eviction_fully_assoc(self):
+        c = LRUCache(entries=2, assoc=0)
+        c.fill("a", 0.0); c.fill("b", 1.0)
+        assert c.lookup("a", 2.0)         # a is now MRU
+        c.fill("c", 3.0)
+        assert not c.lookup("b", 4.0)     # b was LRU -> evicted
+        assert c.lookup("a", 4.0) and c.lookup("c", 4.0)
+
+    def test_set_assoc_conflicts(self):
+        c = LRUCache(entries=4, assoc=2)  # 2 sets x 2 ways
+        keys = [0, 2, 4]                  # all map to set 0 (ints hash to self)
+        for i, k in enumerate(keys):
+            c.fill(k, float(i))
+        assert not c.lookup(0, 10.0)      # evicted by 4
+        assert c.lookup(2, 10.0) and c.lookup(4, 10.0)
+
+    def test_earlier_fill_wins(self):
+        c = LRUCache(entries=4, assoc=0)
+        c.fill("a", 100.0)
+        c.fill("a", 50.0)
+        assert c.lookup("a", 60.0)
+
+
+class TestPTWPool:
+    def test_serializes_beyond_capacity(self):
+        p = PTWPool(2)
+        assert p.acquire(0.0, 100.0) == 0.0
+        assert p.acquire(0.0, 100.0) == 0.0
+        assert p.acquire(0.0, 100.0) == 100.0  # third walk waits
+
+    def test_parallel_within_capacity(self):
+        p = PTWPool(100)
+        starts = [p.acquire(5.0, 1000.0) for _ in range(100)]
+        assert all(s == 5.0 for s in starts)
+
+
+# ----------------------------------------------------- unit: hierarchy walk
+class TestTranslationState:
+    def cfg(self):
+        return TranslationConfig()
+
+    def test_cold_walk_then_l1_hit(self):
+        s = TranslationState(self.cfg(), n_stations=16)
+        r1 = s.access(0, page=7, t=0.0)
+        assert r1.klass == "walk"
+        # cold: l1 50 + l2 100 + 4x(50+270) PWC misses + 270 leaf = 1700
+        assert r1.resolve == pytest.approx(50 + 100 + 4 * 320 + 270)
+        r2 = s.access(0, page=7, t=r1.resolve + 1)
+        assert r2.klass == "l1_hit"
+        assert r2.resolve == pytest.approx(r1.resolve + 1 + 50)
+
+    def test_mshr_hit_under_miss(self):
+        s = TranslationState(self.cfg(), n_stations=16)
+        r1 = s.access(0, page=7, t=0.0)
+        r2 = s.access(0, page=7, t=10.0)
+        assert r2.klass == "l1_mshr_hum"
+        assert r2.resolve == pytest.approx(r1.resolve)
+
+    def test_l2_coalescing_across_stations(self):
+        s = TranslationState(self.cfg(), n_stations=16)
+        r1 = s.access(0, page=7, t=0.0)
+        r2 = s.access(1, page=7, t=10.0)   # other station, same pending walk
+        assert r2.klass == "l2_hum"
+        assert r2.resolve == pytest.approx(r1.resolve)
+        r3 = s.access(2, page=7, t=r1.resolve + 1)  # after fill: L2 hit
+        assert r3.klass == "l2_hit"
+
+    def test_warm_pwc_shortens_walk(self):
+        s = TranslationState(self.cfg(), n_stations=16)
+        r1 = s.access(0, page=0, t=0.0)
+        t2 = r1.resolve + 10
+        r2 = s.access(0, page=1, t=t2)     # adjacent page: PWC all hit
+        assert r2.klass == "walk"
+        assert r2.resolve - t2 == pytest.approx(50 + 100 + 4 * 50 + 270)
+
+    def test_disabled_is_zero_latency(self):
+        cfg = dataclasses.replace(self.cfg(), enabled=False)
+        s = TranslationState(cfg, n_stations=16)
+        r = s.access(0, page=7, t=123.0)
+        assert r.resolve == 123.0
+
+
+# --------------------------------------------- epoch engine vs reference DES
+VALIDATION_CASES = [(8, 256 * KB), (8, 1 * MB), (8, 4 * MB),
+                    (16, 1 * MB), (16, 4 * MB), (16, 16 * MB)]
+
+
+@pytest.mark.parametrize("n,size", VALIDATION_CASES)
+def test_epoch_engine_matches_reference_des(n, size):
+    cfg = paper_config(n)
+    a = simulate(size, cfg)
+    b = simulate_ref(size, cfg)
+    assert a.completion_ns == pytest.approx(b.completion_ns, rel=0.05)
+    assert a.counters.walks == b.counters.walks
+    assert a.counters.requests == b.counters.requests
+
+
+@pytest.mark.parametrize("n,size", VALIDATION_CASES)
+def test_ideal_matches_reference(n, size):
+    # The reference DES models per-station arrival-phase bunching (momentary
+    # over-line-rate arrival, ~ns-scale) that the epoch engine smooths over;
+    # everything else is identical, so agreement is sub-0.5%.
+    cfg = paper_config(n).ideal()
+    a = simulate(size, cfg)
+    b = simulate_ref(size, cfg)
+    assert a.completion_ns == pytest.approx(b.completion_ns, rel=0.005)
+
+
+# ----------------------------------------------------------- paper's claims
+class TestPaperClaims:
+    def test_fig4_small_collectives_degrade_up_to_1_4x(self):
+        degs = [ratsim.compare(1 * MB, n).degradation for n in (8, 16, 32, 64)]
+        assert max(degs) > 1.35
+        assert all(1.30 < d < 1.50 for d in degs)
+
+    def test_fig4_16mb_around_1_1x(self):
+        degs = [ratsim.compare(16 * MB, n).degradation for n in (8, 16, 32, 64)]
+        assert all(1.05 < d < 1.20 for d in degs)
+
+    def test_fig4_overhead_diminishes_with_size(self):
+        sizes = [1 * MB, 4 * MB, 16 * MB, 64 * MB, 256 * MB]
+        degs = [ratsim.compare(s, 16).degradation for s in sizes]
+        assert degs == sorted(degs, reverse=True)
+        assert degs[-1] < 1.02
+
+    def test_fig5_mean_rat_latency_declines(self):
+        lats = [ratsim.compare(s, 16).baseline.mean_rat_ns
+                for s in (1 * MB, 16 * MB, 256 * MB)]
+        assert lats[0] > 5 * lats[-1]
+
+    def test_fig6_rat_fraction_high_for_small(self):
+        c = ratsim.compare(1 * MB, 16)
+        assert 0.2 < c.rat_fraction < 0.5     # paper: ~30% at 1 MB
+        c_big = ratsim.compare(64 * MB, 16)
+        assert c_big.rat_fraction < c.rat_fraction / 2
+
+    def test_fig7_over_90pct_l1_level_hits(self):
+        for s in (1 * MB, 16 * MB, 64 * MB):
+            ctr = ratsim.run(s, 16).counters
+            l1_level = ctr.by_class["l1_hit"] + ctr.by_class["l1_mshr_hum"]
+            assert l1_level / ctr.requests > 0.90
+
+    def test_fig8_l1_hits_dominate_as_size_grows(self):
+        fr = []
+        for s in (1 * MB, 16 * MB, 64 * MB):
+            ctr = ratsim.run(s, 16).counters
+            fr.append(ctr.by_class["l1_hit"] / ctr.requests)
+        assert fr[0] < fr[1] < fr[2]
+        assert fr[2] > 0.9
+
+    def test_fig9_1mb_all_requests_high_latency(self):
+        cfg = paper_config(16).replace(collect_trace=True)
+        r = simulate(1 * MB, cfg)
+        # cold page walks gate (nearly) every request of a 1 MB collective
+        assert np.median(r.trace) > 500.0
+
+    def test_fig10_256mb_spikes_only_at_cold_pages(self):
+        cfg = paper_config(16).replace(collect_trace=True)
+        r = simulate(256 * MB, cfg)
+        l1_lat = cfg.translation.l1.hit_latency_ns
+        spike_frac = np.mean(r.trace > 4 * l1_lat)
+        assert spike_frac < 0.05               # rare spikes
+        assert r.trace.max() > 1000.0          # ...but cold walks exist
+
+    def test_fig11_l2_sizing_beyond_gpu_count_useless(self):
+        degs = {}
+        for entries in (32, 512, 32768):
+            cfg = paper_config(32)
+            tr = dataclasses.replace(
+                cfg.translation,
+                l2=TLBConfig(entries=entries, assoc=2, hit_latency_ns=100.0,
+                             mshr_entries=512))
+            degs[entries] = ratsim.compare(
+                16 * MB, 32, cfg=cfg.replace(translation=tr)).degradation
+        assert degs[512] == pytest.approx(degs[32], rel=0.01)
+        assert degs[32768] == pytest.approx(degs[32], rel=0.01)
+
+
+# ------------------------------------------------------------- optimizations
+class TestOptimizations:
+    def test_pretranslation_recovers_small_collectives(self):
+        base = ratsim.compare(1 * MB, 16)
+        cfg = paper_config(16).replace(pretranslation=PreTranslationConfig(
+            enabled=True, lead_time_ns=3000.0, pages_per_flow=0))
+        opt = simulate(1 * MB, cfg)
+        deg_opt = opt.completion_ns / base.ideal.completion_ns
+        assert base.degradation > 1.3
+        assert deg_opt < 1.05
+
+    def test_prefetch_helps_under_scarce_buffering(self):
+        # With a small ingress buffer, mid-stream page walks stall the port;
+        # next-page prefetch hides them (paper §6.2).
+        fab = FabricConfig(n_gpus=16, ingress_entries=64)
+        cfg = paper_config(16).replace(fabric=fab)
+        base = simulate(64 * MB, cfg)
+        opt = simulate(64 * MB, cfg.replace(
+            prefetch=PrefetchConfig(enabled=True, depth=2)))
+        assert opt.completion_ns < base.completion_ns
+
+    def test_probes_do_not_count_as_requests(self):
+        cfg = paper_config(16).replace(pretranslation=PreTranslationConfig(
+            enabled=True, lead_time_ns=3000.0, pages_per_flow=0))
+        base = simulate(1 * MB, paper_config(16))
+        opt = simulate(1 * MB, cfg)
+        assert opt.counters.requests == base.counters.requests
+        assert opt.counters.probes > 0
+
+
+# ------------------------------------------------------------ property tests
+@settings(max_examples=25, deadline=None)
+@given(size_mb=st.sampled_from([1, 2, 4, 8, 16, 64]),
+       n=st.sampled_from([8, 16, 32]))
+def test_property_baseline_never_faster_than_ideal(size_mb, n):
+    c = ratsim.compare(size_mb * MB, n)
+    assert c.degradation >= 1.0 - 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(size_mb=st.sampled_from([1, 4, 16]), n=st.sampled_from([8, 16, 32]))
+def test_property_request_conservation(size_mb, n):
+    r = ratsim.run(size_mb * MB, n)
+    ctr = r.counters
+    assert sum(ctr.by_class.values()) == ctr.requests
+    fab = r.config.fabric
+    chunk = (size_mb * MB) // n
+    expected = (fab.n_gpus - 1) * math.ceil(chunk / fab.request_bytes)
+    assert ctr.requests == expected
+
+
+@settings(max_examples=10, deadline=None)
+@given(entries=st.sampled_from([64, 512, 4096]))
+def test_property_bigger_l2_never_hurts(entries):
+    cfg = paper_config(16)
+    tr = dataclasses.replace(
+        cfg.translation,
+        l2=TLBConfig(entries=entries, assoc=2, hit_latency_ns=100.0,
+                     mshr_entries=512))
+    big = simulate(4 * MB, cfg.replace(translation=tr)).completion_ns
+    tr_small = dataclasses.replace(
+        cfg.translation,
+        l2=TLBConfig(entries=16, assoc=2, hit_latency_ns=100.0,
+                     mshr_entries=512))
+    small = simulate(4 * MB, cfg.replace(translation=tr_small)).completion_ns
+    assert big <= small * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 32, 64]))
+def test_property_ideal_completion_is_bandwidth_bound(n):
+    size = 64 * MB
+    cfg = paper_config(n).ideal()
+    r = simulate(size, cfg)
+    fab = cfg.fabric
+    chunk = size // n
+    n_req = math.ceil(chunk / fab.request_bytes)
+    stream = (n_req - 1) * fab.request_bytes * (n - 1) / fab.gpu_bw
+    expected = fab.oneway_ns + stream + fab.hbm_ns + fab.return_ns
+    assert r.completion_ns == pytest.approx(expected, rel=1e-6)
+
+
+# ---------------------------------------------------------------- cost model
+class TestCostModel:
+    def test_tracks_simulator_within_10pct(self):
+        m = CostModel(paper_config(16))
+        for s, (mod, sim, err) in m.validate(
+                [1 * MB, 4 * MB, 16 * MB, 64 * MB]).items():
+            assert err < 0.10, f"{s}: model {mod} vs sim {sim}"
+
+    def test_degradation_shape(self):
+        m = CostModel(paper_config(16))
+        d1, d16 = m.degradation(1 * MB), m.degradation(16 * MB)
+        assert d1 > d16 > 1.0
+
+
+class TestScheduler:
+    def test_warmup_plan_for_moe_sized_collective(self):
+        s = TranslationAwareScheduler(n_gpus=16, overlap_compute_ns=5e3)
+        plan = s.plan_all_to_all(total_bytes=8 * MB)
+        assert plan.warmup_chunk_bytes > 0
+        assert plan.est_time_ns <= plan.est_time_unscheduled_ns
+        assert plan.per_peer_buffer_bytes == 2 * MB   # one page per peer
+
+    def test_no_warmup_without_compute_window(self):
+        s = TranslationAwareScheduler(n_gpus=16, overlap_compute_ns=0.0)
+        plan = s.plan_all_to_all(total_bytes=8 * MB)
+        assert plan.warmup_chunk_bytes == 0
+        assert plan.n_chunks >= 1

@@ -1,0 +1,186 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes and dtypes per the harness requirement; tolerances follow the
+compute dtype (kernels accumulate in f32 internally).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.grouped_matmul import grouped_matmul_kernel
+from repro.kernels.rmsnorm import rmsnorm_kernel
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ flash attention
+ATTN_SHAPES = [
+    # (B, Sq, Sk, H, KV, Dh, causal)
+    (1, 128, 128, 4, 4, 64, True),
+    (2, 256, 256, 8, 2, 64, True),      # GQA group=4
+    (1, 256, 256, 4, 1, 128, True),     # MQA
+    (2, 128, 128, 4, 4, 128, False),    # bidirectional (encoder)
+    (1, 512, 512, 2, 2, 64, True),      # multi k-block online softmax
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,Dh,causal", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Sk, H, KV, Dh, causal, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, abs(hash((B, Sq, H, KV, Dh))) % (2**31)), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, Dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, Dh), dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, block_q=128,
+                                 block_k=128, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_flash_attention_block_shape_sweep():
+    q = jax.random.normal(KEY, (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 256, 2, 64), jnp.float32)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256), (128, 256)]:
+        out = flash_attention_kernel(q, k, v, causal=True, block_q=bq,
+                                     block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"block {bq}x{bk}")
+
+
+# ------------------------------------------------------------ grouped matmul
+GMM_SHAPES = [
+    # (T, D, F, E)
+    (256, 64, 128, 4),
+    (512, 128, 256, 8),
+    (128, 256, 128, 2),
+    (384, 64, 128, 6),      # T not a power of two (3 tiles)
+]
+
+
+@pytest.mark.parametrize("T,D,F,E", GMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_matches_ref(T, D, F, E, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, abs(hash((T, D, F, E))) % (2**31)), 3)
+    lhs = jax.random.normal(ks[0], (T, D), dtype)
+    rhs = jax.random.normal(ks[1], (E, D, F), dtype) / np.sqrt(D)
+    # random ragged group sizes summing to T (some possibly empty)
+    cuts = np.sort(np.asarray(
+        jax.random.randint(ks[2], (E - 1,), 0, T + 1)))
+    offs = jnp.asarray(np.concatenate([[0], cuts, [T]]), jnp.int32)
+    out = grouped_matmul_kernel(lhs, rhs, offs, block_t=128, block_f=128,
+                                interpret=True)
+    expect = ref.grouped_matmul_ref(lhs, rhs, offs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_grouped_matmul_empty_groups():
+    lhs = jax.random.normal(KEY, (256, 64), jnp.float32)
+    rhs = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 64, 128), jnp.float32)
+    offs = jnp.asarray([0, 0, 256, 256, 256], jnp.int32)  # all rows -> expert 1
+    out = grouped_matmul_kernel(lhs, rhs, offs, interpret=True)
+    expect = lhs @ rhs[1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ SSD scan
+SSD_SHAPES = [
+    # (b, S, H, P, N, chunk)
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 4, 32, 64, 32),
+    (1, 256, 2, 64, 128, 64),
+]
+
+
+@pytest.mark.parametrize("b,S,H,P,N,chunk", SSD_SHAPES)
+def test_ssd_scan_matches_model_oracle(b, S, H, P, N, chunk):
+    from repro.models.ssd import ssd_chunked
+    ks = jax.random.split(jax.random.fold_in(KEY, abs(hash((b, S, H, P, N))) % (2**31)), 5)
+    x = jax.random.normal(ks[0], (b, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H), jnp.float32))
+    A_log = jax.random.normal(ks[2], (H,), jnp.float32) * 0.5
+    B = jax.random.normal(ks[3], (b, S, N), jnp.float32) / np.sqrt(N)
+    C = jax.random.normal(ks[4], (b, S, N), jnp.float32) / np.sqrt(N)
+    y_k, s_k = ops.ssd_scan(x, dt, A_log, B, C, chunk=chunk)
+    y_m, s_m = ssd_chunked(x, dt, A_log, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_m),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_intra_chunk_kernel_vs_ref():
+    from repro.kernels.ssd_scan import ssd_chunk_kernel
+    ks = jax.random.split(KEY, 5)
+    G, Q, P, N = 6, 32, 16, 24
+    x = jax.random.normal(ks[0], (G, Q, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (G, Q), jnp.float32))
+    a = -jnp.abs(jax.random.normal(ks[2], (G, Q), jnp.float32))
+    B = jax.random.normal(ks[3], (G, Q, N), jnp.float32)
+    C = jax.random.normal(ks[4], (G, Q, N), jnp.float32)
+    y_k, s_k = ssd_chunk_kernel(x, dt, a, B, C, interpret=True)
+    y_r, s_r = ref.ssd_chunk_ref(x, dt, a, B, C)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_equivalence_to_sequential_recurrence():
+    """Chunked SSD == step-by-step recurrence (ground truth)."""
+    ks = jax.random.split(KEY, 5)
+    b, S, H, P, N = 1, 32, 2, 8, 8
+    x = jax.random.normal(ks[0], (b, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H), jnp.float32))
+    A_log = jax.random.normal(ks[2], (H,), jnp.float32) * 0.5
+    B = jax.random.normal(ks[3], (b, S, N), jnp.float32)
+    C = jax.random.normal(ks[4], (b, S, N), jnp.float32)
+    y_k, s_k = ops.ssd_scan(x, dt, A_log, B, C, chunk=8)
+    # sequential reference
+    a = dt * (-jnp.exp(A_log))
+    state = jnp.zeros((b, H, P, N))
+    ys = []
+    for t in range(S):
+        state = (jnp.exp(a[:, t])[..., None, None] * state
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t]))
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t], state))
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(state),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("T,D", [(256, 64), (512, 1024), (256, 3072)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(T, D, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, T * D), 2)
+    x = jax.random.normal(ks[0], (T, D), dtype)
+    w = jax.random.normal(ks[1], (D,), dtype)
+    out = rmsnorm_kernel(x, w, interpret=True)
+    expect = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.models.layers import rmsnorm as model_rmsnorm
+    x = jax.random.normal(KEY, (256, 128), jnp.float32)
+    w = jnp.ones((128,))
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm_kernel(x, w, interpret=True)),
+        np.asarray(model_rmsnorm(x, w, 1e-6)), rtol=1e-5, atol=1e-5)
