@@ -7,6 +7,8 @@ from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
                      PWCConfig, PreTranslationConfig, PrefetchConfig,
                      paper_config, KB, MB, GB)
 from .engine import simulate, RunResult
+from .patterns import (CollectivePattern, FlowSpec, PATTERNS, get_pattern,
+                       analytic_volume)
 from .ratsim import run, compare, sweep, Comparison
 from .ref_des import simulate_ref
 
@@ -14,5 +16,6 @@ __all__ = [
     "SimConfig", "FabricConfig", "TranslationConfig", "TLBConfig",
     "PWCConfig", "PreTranslationConfig", "PrefetchConfig", "paper_config",
     "KB", "MB", "GB", "simulate", "RunResult", "run", "compare", "sweep",
-    "Comparison", "simulate_ref",
+    "Comparison", "simulate_ref", "CollectivePattern", "FlowSpec",
+    "PATTERNS", "get_pattern", "analytic_volume",
 ]

@@ -144,9 +144,15 @@ class SimConfig:
     pretranslation: PreTranslationConfig = field(
         default_factory=PreTranslationConfig)
     prefetch: PrefetchConfig = field(default_factory=PrefetchConfig)
+    # Collective traffic pattern, by registry name (repro.core.patterns):
+    # "all_to_all" (the paper's workload, default), "ring_allreduce",
+    # "rd_allreduce", "all_gather", "reduce_scatter", "broadcast",
+    # "hier_all_to_all".
+    collective: str = "all_to_all"
     iterations: int = 1          # back-to-back collective iterations
-    symmetric: bool = True       # simulate a single target GPU (all-pairs is
-                                 # symmetric); False simulates every target
+    symmetric: bool = True       # simulate a single target GPU (symmetric
+                                 # patterns load every GPU identically);
+                                 # False simulates every target
     collect_trace: bool = False  # keep per-request latency arrays (figs 9/10)
 
     def replace(self, **kw) -> "SimConfig":

@@ -1,12 +1,14 @@
-"""Page-epoch simulation engine for all-pairs AllToAll over a UALink pod.
+"""Page-epoch simulation engine for collectives over a UALink pod.
 
-The all-pairs/direct schedule (MSCCLang) is deterministic streaming traffic:
-every source GPU concurrently streams one chunk to every peer, requests stripe
-round-robin across the 16 UALink stations, and each (flow, page) forms an
-*epoch* whose internal request timing is closed-form.  The engine therefore
-schedules only epoch-level events — O(flows x pages) of them — and expands
-per-request statistics analytically, which is exact for this workload (see
-DESIGN.md §3) and scales to the paper's 4 GB x 64 GPU sweeps in pure Python.
+Collective schedules (the all-pairs AllToAll of the paper, plus the ring /
+recursive-doubling / tree patterns of :mod:`repro.core.patterns`) are
+deterministic streaming traffic: in each dependency step every source GPU
+concurrently streams chunks to its step peers, requests stripe round-robin
+across the 16 UALink stations, and each (flow, page) forms an *epoch* whose
+internal request timing is closed-form.  The engine therefore schedules only
+epoch-level events — O(flows x pages) of them — and expands per-request
+statistics analytically, which is exact for these workloads (see DESIGN.md
+§3) and scales to the paper's 4 GB x 64 GPU sweeps in pure Python.
 
 Backpressure model: each target station has a finite ingress buffer
 (``FabricConfig.ingress_entries``).  Requests occupy a slot from arrival until
@@ -28,6 +30,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .config import SimConfig
+from .patterns import FlowSpec, get_pattern, simulated_dsts
 from .tlb import TranslationState, Counters, L1_HIT, L1_HUM, INF
 
 
@@ -94,27 +97,31 @@ class RunResult:
         }
 
 
-def _build_flows(cfg: SimConfig, nbytes: int, dst: int,
-                 t_start: float) -> List[Flow]:
-    """Flows arriving at target ``dst`` for one all-pairs AllToAll."""
+def flows_for_dst(specs: List[FlowSpec], cfg: SimConfig, dst: int,
+                  t_start: float) -> List[Flow]:
+    """Materialize one step's :class:`FlowSpec` set as flows at ``dst``.
+
+    Per-flow bandwidth share: a source's concurrent outgoing flows of the
+    step split its station pool evenly, so the inter-request spacing is
+    ``request_bytes * out_degree / gpu_bw`` (the all-pairs ``n - 1`` case of
+    the seed engine generalized to arbitrary step out-degrees).
+    """
     fab = cfg.fabric
-    n = fab.n_gpus
-    chunk = nbytes // n  # self-chunk stays local
-    # Per-flow bandwidth share: (n-1) concurrent flows stripe over the full
-    # station pool at both endpoints.
-    delta = fab.request_bytes * (n - 1) / fab.gpu_bw
+    out_deg: Dict[int, int] = {}
+    for s in specs:
+        out_deg[s.src] = out_deg.get(s.src, 0) + 1
     dst_base = (dst + 1) << 42  # distinct 4 TB NPA region per target GPU
     flows = []
-    for src in range(n):
-        if src == dst:
+    for s in specs:
+        if s.dst != dst or s.nbytes <= 0:
             continue
         flows.append(Flow(
-            src=src, dst=dst,
-            base_addr=dst_base + src * chunk,
-            nbytes=chunk,
+            src=s.src, dst=dst,
+            base_addr=dst_base + s.offset,
+            nbytes=s.nbytes,
             t_start=t_start,
-            delta_ns=delta,
-            stripe=src % fab.stations_per_gpu,
+            delta_ns=fab.request_bytes * out_deg[s.src] / fab.gpu_bw,
+            stripe=s.src % fab.stations_per_gpu,
         ))
     return flows
 
@@ -169,7 +176,19 @@ class EpochEngine:
         return eps
 
     # -- core ----------------------------------------------------------------
-    def run_iteration(self, flows: List[Flow], collect_trace: bool) -> float:
+    def run_iteration(self, flows: List[Flow], collect_trace: bool,
+                      fi_base: int = 0, first_step: bool = True) -> float:
+        """Simulate one step's flow set; returns absolute completion time.
+
+        Called once per collective step (and per iteration); translation
+        state persists across calls (TLBs stay warm), station ingress
+        bookkeeping resets — each step's stream starts from an empty port,
+        matching the reference DES (DESIGN.md §5.2).  ``fi_base`` offsets
+        trace flow indices when a run spans several steps; ``first_step``
+        marks the first step of an iteration — pre-translation probes fire
+        only there, since mid-collective steps are back-to-back barriers
+        with no compute window to hide probes in.
+        """
         cfg = self.cfg
         fab = cfg.fabric
         rb = fab.request_bytes
@@ -179,12 +198,14 @@ class EpochEngine:
         completion = 0.0
 
         pre = cfg.pretranslation
-        if pre.enabled and cfg.translation.enabled:
+        if pre.enabled and cfg.translation.enabled and first_step:
             self._pretranslate(flows)
 
         epochs = self._epochs(flows)
         # Per-station request totals (for ingress-buffer occupancy gating).
         for st in self.stations:
+            st.skew = 0.0
+            st.release = -INF
             st.consumed = 0
             st.total = 0
         for f in flows:
@@ -279,7 +300,7 @@ class EpochEngine:
                     completion = done
 
             if collect_trace:
-                self.trace_chunks.append((fi, i0, trace))
+                self.trace_chunks.append((fi_base + fi, i0, trace))
 
         return completion
 
@@ -318,54 +339,64 @@ class EpochEngine:
 
 
 def simulate(nbytes: int, cfg: SimConfig) -> RunResult:
-    """Simulate all-pairs AllToAll of ``nbytes`` per GPU under ``cfg``."""
+    """Simulate ``cfg.collective`` of ``nbytes`` per GPU under ``cfg``.
+
+    The pattern layer supplies per-step flow sets; steps are dependency
+    barriers (step k+1's flows start at step k's completion).  Symmetric
+    patterns simulate one representative target (exact — every GPU is loaded
+    identically); asymmetric ones (broadcast) simulate every receiving
+    target regardless of ``cfg.symmetric``.
+    """
     fab = cfg.fabric
-    dsts = [0] if cfg.symmetric else list(range(fab.n_gpus))
+    pattern = get_pattern(cfg.collective)
+    step_specs = pattern.steps(nbytes, fab)
+    dsts = simulated_dsts(pattern, step_specs, cfg.symmetric, fab)
     results: List[IterationResult] = []
     engines = [EpochEngine(cfg, dst=d) for d in dsts]
+    rb = fab.request_bytes
+    flow_sizes: List[int] = []  # request count per traced flow, across steps
     t = 0.0
     for it in range(cfg.iterations):
-        comp = 0.0
-        for eng in engines:
-            flows = _build_flows(cfg, nbytes, eng.dst, t_start=t)
-            comp = max(comp, eng.run_iteration(
-                flows, cfg.collect_trace and it == 0))
-        results.append(IterationResult(completion_ns=comp - t))
-        t = comp
+        t_iter = t
+        collect = cfg.collect_trace and it == 0
+        for si, specs in enumerate(step_specs):
+            comp = t
+            for eng in engines:
+                flows = flows_for_dst(specs, cfg, eng.dst, t_start=t)
+                if not flows:
+                    continue
+                # Trace only the representative (first) target, as the seed
+                # engine did.
+                trace_this = collect and eng is engines[0]
+                fi_base = len(flow_sizes)
+                if trace_this:
+                    flow_sizes.extend(
+                        max(1, math.ceil(f.nbytes / rb)) for f in flows)
+                comp = max(comp, eng.run_iteration(
+                    flows, trace_this, fi_base=fi_base, first_step=si == 0))
+            t = comp
+        results.append(IterationResult(completion_ns=t - t_iter))
 
     # Merge counters (symmetric mode already represents one GPU; full mode
     # aggregates every target).
     ctr = engines[0].state.counters
     for eng in engines[1:]:
-        c = eng.state.counters
-        ctr.requests += c.requests
-        for k in ctr.by_class:
-            ctr.by_class[k] += c.by_class[k]
-        ctr.rat_ns_sum += c.rat_ns_sum
-        ctr.rat_ns_max = max(ctr.rat_ns_max, c.rat_ns_max)
-        ctr.walks += c.walks
-        ctr.walk_mem_reads += c.walk_mem_reads
-        ctr.pwc_hits += c.pwc_hits
-        ctr.pwc_misses += c.pwc_misses
-        ctr.probes += c.probes
+        ctr.merge(eng.state.counters)
 
     trace = None
     bounds = None
     if cfg.collect_trace:
-        eng = engines[0]
-        nflows = fab.n_gpus - 1
-        rb = fab.request_bytes
-        chunk = nbytes // fab.n_gpus
-        per_flow = max(1, math.ceil(chunk / rb))
-        trace = np.zeros(nflows * per_flow)
-        for (fi, i0, arr) in eng.trace_chunks:
-            trace[fi * per_flow + i0: fi * per_flow + i0 + len(arr)] = arr
-        bounds = [per_flow * i for i in range(nflows + 1)]
+        bounds = [0]
+        for sz in flow_sizes:
+            bounds.append(bounds[-1] + sz)
+        trace = np.zeros(bounds[-1])
+        for (fi, i0, arr) in engines[0].trace_chunks:
+            trace[bounds[fi] + i0: bounds[fi] + i0 + len(arr)] = arr
 
-    stall_mean = 0.0
-    total_reqs = sum(e.state.counters.requests for e in engines) or 1
+    # ctr already aggregates every engine (merge above), so it is the
+    # denominator; summing per-engine counters here would double-count.
     stall_total = sum(e.stall_sum for e in engines)
-    stall_mean = stall_total / total_reqs
+    stall_mean = stall_total / (ctr.requests or 1)
 
     return RunResult(iterations=results, counters=ctr, config=cfg,
                      collective_bytes=nbytes, trace=trace,

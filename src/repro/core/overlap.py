@@ -3,7 +3,7 @@
 The paper proposes (1) fused pre-translation kernels and (2) software TLB
 prefetching to hide destination-side cold-start latency.  On TPU there is no
 Link MMU, but collectives still pay a cold-start/latency term that dominates
-small transfers.  The same two ideas map to (DESIGN.md §3):
+small transfers.  The same two ideas map to (DESIGN.md §6):
 
   * :func:`warmup_all_to_all` — issue a tiny head chunk of the all-to-all
     *before* (and data-dependency-free of) the producing compute, so XLA's

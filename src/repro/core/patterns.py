@@ -1,0 +1,298 @@
+"""Collective traffic patterns for the RAT simulator (DESIGN.md §5).
+
+The paper evaluates Reverse Address Translation only on the all-pairs
+AllToAll schedule; this module generalizes the simulator to the collective
+algorithms that dominate real training/inference traffic.  A
+:class:`CollectivePattern` emits, for each *step* of the algorithm, the set
+of (src, dst) flows arriving at every target GPU — the engine and the
+reference DES replay exactly these flow sets, so oracle-equivalence tests
+bind for every pattern.
+
+Semantics shared by all patterns (DESIGN.md §5.1):
+
+  * ``nbytes`` is the per-GPU buffer size of the collective (the amount of
+    data each participant holds/ends with), so sizes are comparable across
+    patterns.  Chunked algorithms move ``nbytes // n_gpus`` per chunk.
+  * A *step* is a dependency barrier: every flow of step ``k+1`` starts only
+    after all flows of step ``k`` complete (ring/tree algorithms forward data
+    they received in the previous step).
+  * ``FlowSpec.offset`` is the byte offset inside the destination GPU's
+    receive region; it determines which pages (and hence which Link-TLB
+    entries) the flow touches.  Patterns that revisit the same region across
+    steps (e.g. recursive doubling) hit warm TLB entries after step 0 —
+    exactly the locality difference this abstraction exists to expose.
+  * Patterns with ``symmetric=True`` load every GPU identically in every
+    step, so simulating a single representative target is exact; asymmetric
+    patterns (broadcast) force the engine into every-target mode regardless
+    of ``SimConfig.symmetric``.
+
+Only addresses and byte counts matter to the translation model, so
+reduction semantics are not modelled: ring ReduceScatter and ring AllGather
+emit identical flow sets, and "AllReduce" costs are pure communication time
+(no reduction FLOPs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Type
+
+from .config import FabricConfig
+
+
+@dataclass(frozen=True)
+class FlowSpec:
+    """One (src -> dst) stream within a single collective step.
+
+    ``offset`` addresses the flow inside dst's receive region; the engine
+    turns it into an NPA by adding the per-GPU region base.
+    """
+
+    src: int
+    dst: int
+    nbytes: int
+    offset: int
+
+
+class CollectivePattern:
+    """Base class: a collective algorithm as per-step flow sets."""
+
+    name: str = "abstract"
+    symmetric: bool = True
+
+    def steps(self, nbytes: int, fab: FabricConfig) -> List[List[FlowSpec]]:
+        """Flow sets of each dependency step, in execution order."""
+        raise NotImplementedError
+
+    def total_bytes(self, nbytes: int, fab: FabricConfig) -> int:
+        """Total bytes crossing the fabric (all steps, all pairs)."""
+        return sum(s.nbytes for step in self.steps(nbytes, fab) for s in step)
+
+    def representative_dst(self, fab: FabricConfig) -> int:
+        """The target GPU simulated in symmetric mode."""
+        return 0
+
+
+class AllToAll(CollectivePattern):
+    """All-pairs/direct AllToAll (MSCCLang): the paper's workload.
+
+    One step; every GPU streams one ``nbytes // n`` chunk to every peer
+    concurrently.  This is the seed engine's hard-wired schedule, kept
+    bit-for-bit identical as the default pattern.
+    """
+
+    name = "all_to_all"
+
+    def steps(self, nbytes, fab):
+        n = fab.n_gpus
+        chunk = nbytes // n  # self-chunk stays local
+        step = [FlowSpec(src=src, dst=dst, nbytes=chunk, offset=src * chunk)
+                for dst in range(n) for src in range(n) if src != dst]
+        return [step]
+
+
+class RingAllReduce(CollectivePattern):
+    """Bandwidth-optimal ring AllReduce: reduce-scatter then allgather.
+
+    2(n-1) steps; in every step each GPU sends one ``nbytes // n`` chunk to
+    its ring successor.  The chunk index rotates, so each step touches a
+    different slice of the target's buffer — for buffers smaller than
+    ``n_gpus`` pages, successive chunks share pages and warm the TLBs.
+    """
+
+    name = "ring_allreduce"
+
+    def steps(self, nbytes, fab):
+        n = fab.n_gpus
+        chunk = nbytes // n
+        steps = []
+        # Reduce-scatter phase: step s, GPU r forwards chunk (r - s) mod n.
+        for s in range(n - 1):
+            steps.append([
+                FlowSpec(src=r, dst=(r + 1) % n, nbytes=chunk,
+                         offset=((r - s) % n) * chunk)
+                for r in range(n)])
+        # Allgather phase: GPU r owns reduced chunk (r + 1) mod n and
+        # circulates it; step s forwards chunk (r + 1 - s) mod n.
+        for s in range(n - 1):
+            steps.append([
+                FlowSpec(src=r, dst=(r + 1) % n, nbytes=chunk,
+                         offset=((r + 1 - s) % n) * chunk)
+                for r in range(n)])
+        return steps
+
+
+class RecursiveDoublingAllReduce(CollectivePattern):
+    """Latency-optimal recursive-doubling AllReduce (power-of-two pods).
+
+    log2(n) steps; in step s each GPU exchanges the *full* buffer with
+    partner ``rank XOR 2**s``.  Every step rewrites the same region, so all
+    pages are warm after step 0 — but the partner (and hence the station
+    striping) changes each step, exercising the per-station L1 / shared L2
+    split of the hierarchy.
+    """
+
+    name = "rd_allreduce"
+
+    def steps(self, nbytes, fab):
+        n = fab.n_gpus
+        if n < 2 or n & (n - 1):
+            raise ValueError(
+                f"rd_allreduce requires a power-of-two GPU count, got {n}")
+        return [[FlowSpec(src=r, dst=r ^ (1 << s), nbytes=nbytes, offset=0)
+                 for r in range(n)]
+                for s in range(n.bit_length() - 1)]
+
+
+class RingAllGather(CollectivePattern):
+    """Ring AllGather: each GPU ends with the ``nbytes`` concatenation.
+
+    n-1 steps; GPU r starts owning chunk r (``nbytes // n``) and forwards
+    chunk (r - s) mod n to its successor in step s.
+    """
+
+    name = "all_gather"
+
+    def steps(self, nbytes, fab):
+        n = fab.n_gpus
+        chunk = nbytes // n
+        return [[FlowSpec(src=r, dst=(r + 1) % n, nbytes=chunk,
+                          offset=((r - s) % n) * chunk)
+                 for r in range(n)]
+                for s in range(n - 1)]
+
+
+class RingReduceScatter(RingAllGather):
+    """Ring ReduceScatter: traffic-identical to ring AllGather.
+
+    The translation model only sees addresses and bytes, so the reduction
+    on arrival is free; kept as a distinct named pattern for API clarity
+    (and so reduction-aware extensions have a seam to hook into).
+    """
+
+    name = "reduce_scatter"
+
+
+class BinomialBroadcast(CollectivePattern):
+    """Binomial-tree broadcast from root 0 (any GPU count).
+
+    ceil(log2(n)) steps; in step s every rank below ``2**s`` that has the
+    data forwards the full buffer to ``rank + 2**s``.  Asymmetric: each
+    non-root GPU receives exactly once, so the engine simulates every
+    receiving target and the step barrier models the forwarding dependency.
+    """
+
+    name = "broadcast"
+    symmetric = False
+
+    def steps(self, nbytes, fab):
+        n = fab.n_gpus
+        steps = []
+        s = 0
+        while (1 << s) < n:
+            step = [FlowSpec(src=r, dst=r + (1 << s), nbytes=nbytes, offset=0)
+                    for r in range(1 << s) if r + (1 << s) < n]
+            if step:
+                steps.append(step)
+            s += 1
+        return steps
+
+
+class HierarchicalAllToAll(CollectivePattern):
+    """Two-level AllToAll: intra-node gather, then inter-node exchange.
+
+    Phase 1: within each ``gpus_per_node`` group, GPU i hands local peer p
+    the chunks destined for p's rail (one ``nbytes // n`` chunk per node) —
+    (g-1) flows of ``nbytes // g`` per GPU into a staging region above the
+    final buffer.  Phase 2: each GPU exchanges aggregated node-chunks with
+    its (n/g - 1) rail counterparts — flows of ``g * nbytes // n`` landing
+    at the final buffer offset of the sender's node.  Fewer, larger flows
+    per step than direct AllToAll: fewer cold pages per step at the cost of
+    2x fabric volume (approximately; exactly (g-1)/g + (m-1)/m of nbytes
+    per GPU vs (n-1)/n).
+    """
+
+    name = "hier_all_to_all"
+
+    def steps(self, nbytes, fab):
+        n, g = fab.n_gpus, fab.gpus_per_node
+        if g <= 0 or n % g:
+            raise ValueError(
+                f"hier_all_to_all needs n_gpus divisible by gpus_per_node "
+                f"(got {n} / {g})")
+        m = n // g  # nodes
+        chunk = nbytes // n
+        steps = []
+        if g > 1:
+            intra = []
+            for src in range(n):
+                node = src // g
+                for p in range(g):
+                    dst = node * g + p
+                    if dst != src:
+                        intra.append(FlowSpec(
+                            src=src, dst=dst, nbytes=m * chunk,
+                            offset=nbytes + (src % g) * m * chunk))
+            steps.append(intra)
+        if m > 1:
+            inter = []
+            for src in range(n):
+                p, node = src % g, src // g
+                for k in range(m):
+                    if k != node:
+                        inter.append(FlowSpec(
+                            src=src, dst=k * g + p, nbytes=g * chunk,
+                            offset=node * g * chunk))
+            steps.append(inter)
+        return steps
+
+
+PATTERNS: Dict[str, Type[CollectivePattern]] = {
+    cls.name: cls for cls in (
+        AllToAll, RingAllReduce, RecursiveDoublingAllReduce, RingAllGather,
+        RingReduceScatter, BinomialBroadcast, HierarchicalAllToAll)
+}
+
+
+def get_pattern(name: str) -> CollectivePattern:
+    """Instantiate a registered pattern by name."""
+    try:
+        return PATTERNS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown collective {name!r}; known: {sorted(PATTERNS)}") from None
+
+
+def simulated_dsts(pattern: CollectivePattern, step_specs, symmetric: bool,
+                   fab: FabricConfig) -> List[int]:
+    """Target GPUs a simulator must model for this pattern.
+
+    Shared by the epoch engine and the reference DES — oracle-equivalence
+    tests only bind if both sides simulate the same target set.
+    """
+    if symmetric and pattern.symmetric:
+        return [pattern.representative_dst(fab)]
+    return sorted({s.dst for step in step_specs for s in step}) or [0]
+
+
+def analytic_volume(name: str, nbytes: int, fab: FabricConfig) -> int:
+    """Closed-form total fabric bytes of a collective (conservation oracle).
+
+    Independent of :meth:`CollectivePattern.steps` so tests can check the
+    emitted flow sets against it.
+    """
+    n, g = fab.n_gpus, fab.gpus_per_node
+    chunk = nbytes // n
+    if name == "all_to_all":
+        return n * (n - 1) * chunk
+    if name == "ring_allreduce":
+        return 2 * (n - 1) * n * chunk
+    if name == "rd_allreduce":
+        return (n.bit_length() - 1) * n * nbytes
+    if name in ("all_gather", "reduce_scatter"):
+        return (n - 1) * n * chunk
+    if name == "broadcast":
+        return (n - 1) * nbytes
+    if name == "hier_all_to_all":
+        m = n // g
+        return n * ((g - 1) * m * chunk + (m - 1) * g * chunk)
+    raise ValueError(f"no analytic volume for {name!r}")

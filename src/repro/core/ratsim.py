@@ -5,13 +5,17 @@ Typical use::
     from repro.core import ratsim
     r = ratsim.compare(1 << 20, n_gpus=16)       # baseline vs ideal
     print(r.degradation, r.baseline.mean_rat_ns)
+    r = ratsim.compare(1 << 20, 16, collective="ring_allreduce")
 
 All figures of the paper are produced through this module (see benchmarks/).
+The ``collective=`` axis selects any registered traffic pattern
+(:mod:`repro.core.patterns`); the default is the paper's all-pairs AllToAll.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
                      PreTranslationConfig, PrefetchConfig, paper_config,
@@ -38,26 +42,47 @@ class Comparison:
         return (b["rat_ns"] + b["stall_ns"]) / total
 
 
-def run(nbytes: int, n_gpus: int = 16, *, cfg: Optional[SimConfig] = None,
-        **cfg_kw) -> RunResult:
+def _resolve_cfg(n_gpus: int, collective: Optional[str],
+                 cfg: Optional[SimConfig], cfg_kw) -> SimConfig:
     cfg = cfg or paper_config(n_gpus, **cfg_kw)
-    return simulate(nbytes, cfg)
+    if collective is not None:
+        cfg = cfg.replace(collective=collective)
+    return cfg
+
+
+def run(nbytes: int, n_gpus: int = 16, *, collective: Optional[str] = None,
+        cfg: Optional[SimConfig] = None, **cfg_kw) -> RunResult:
+    return simulate(nbytes, _resolve_cfg(n_gpus, collective, cfg, cfg_kw))
 
 
 def compare(nbytes: int, n_gpus: int = 16, *,
+            collective: Optional[str] = None,
             cfg: Optional[SimConfig] = None, **cfg_kw) -> Comparison:
-    cfg = cfg or paper_config(n_gpus, **cfg_kw)
+    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw)
     return Comparison(baseline=simulate(nbytes, cfg),
                       ideal=simulate(nbytes, cfg.ideal()))
 
 
-def sweep(sizes, gpu_counts, *, base_cfg: Optional[SimConfig] = None,
+def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
+          base_cfg: Optional[SimConfig] = None,
           **cfg_kw) -> Dict[tuple, Comparison]:
-    """The paper's main sweep (Figs. 4 and 5)."""
+    """The paper's main sweep (Figs. 4 and 5), optionally per collective.
+
+    Without ``collectives`` the result keys are ``(n_gpus, size)`` as in the
+    seed API; with a list of pattern names they grow a leading axis:
+    ``(collective, n_gpus, size)``.
+    """
     out = {}
-    for n in gpu_counts:
-        for s in sizes:
-            cfg = (base_cfg.replace(fabric=FabricConfig(n_gpus=n))
-                   if base_cfg is not None else paper_config(n, **cfg_kw))
-            out[(n, s)] = compare(s, n, cfg=cfg)
+    colls = list(collectives) if collectives is not None else [None]
+    for coll in colls:
+        for n in gpu_counts:
+            for s in sizes:
+                # Rescale only the GPU count; every other fabric field of
+                # base_cfg (gpus_per_node, stations, buffering...) is kept —
+                # pattern shape depends on them.
+                cfg = (base_cfg.replace(fabric=dataclasses.replace(
+                           base_cfg.fabric, n_gpus=n))
+                       if base_cfg is not None else paper_config(n, **cfg_kw))
+                cmp_ = compare(s, n, collective=coll, cfg=cfg)
+                out[(n, s) if collectives is None else (coll, n, s)] = cmp_
     return out

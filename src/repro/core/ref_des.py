@@ -3,21 +3,25 @@
 Simulates every individual request through the same
 :class:`~repro.core.tlb.TranslationState` machinery as the page-epoch engine,
 but with explicit per-station in-order FIFOs and slot-accurate ingress
-buffering instead of closed-form epoch expansion.  Used by the test suite to
-validate :mod:`repro.core.engine` at small collective sizes; too slow for the
-paper's 4 GB sweeps (that is the point of the epoch engine).
+buffering instead of closed-form epoch expansion.  Replays exactly the flow
+sets the pattern layer (:mod:`repro.core.patterns`) emits — one station-queue
+episode per collective step, barriered on the previous step's completion — so
+oracle-equivalence tests bind for every collective, not just the paper's
+all-pairs AllToAll.  Used by the test suite to validate
+:mod:`repro.core.engine` at small collective sizes; too slow for the paper's
+4 GB sweeps (that is the point of the epoch engine).
 """
 from __future__ import annotations
 
 import heapq
 import math
-from collections import deque
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .config import SimConfig
-from .engine import Flow, RunResult, IterationResult, _build_flows
+from .engine import Flow, RunResult, IterationResult, flows_for_dst
+from .patterns import get_pattern, simulated_dsts
 from .tlb import TranslationState
 
 
@@ -61,28 +65,32 @@ class _StationQueue:
         heapq.heappush(self.retires, retire)
 
 
-def simulate_ref(nbytes: int, cfg: SimConfig) -> RunResult:
-    """Oracle simulation of one target GPU (symmetric all-pairs)."""
-    fab = cfg.fabric
-    rb = fab.request_bytes
-    ns = fab.stations_per_gpu
-    page_bytes = cfg.translation.page_bytes
-    state = TranslationState(cfg.translation, ns)
-    results = []
-    t_iter = 0.0
-    trace = None
-    bounds = None
-    stall_sum = 0.0
+class _RefTarget:
+    """One target GPU's DES state (translation persists across steps)."""
 
-    for it in range(cfg.iterations):
-        flows = _build_flows(cfg, nbytes, dst=0, t_start=t_iter)
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.state = TranslationState(cfg.translation,
+                                      cfg.fabric.stations_per_gpu)
+        self.stall_sum = 0.0
+
+    def run_step(self, flows: List[Flow], trace: Optional[np.ndarray],
+                 bounds: Optional[List[int]], fi_base: int) -> float:
+        """Replay one step's flows request-by-request; returns completion.
+
+        Fresh station queues per step: the previous step's translations all
+        resolved before its completion barrier, so every ingress slot is
+        free again by the time the next step's head requests arrive.
+        """
+        cfg = self.cfg
+        fab = cfg.fabric
+        rb = fab.request_bytes
+        ns = fab.stations_per_gpu
+        page_bytes = cfg.translation.page_bytes
         svc = rb / fab.station_bw
-        stations = [_StationQueue(fab.ingress_entries, svc) for _ in range(ns)]
-        per_flow = max(1, math.ceil(flows[0].nbytes / rb))
-        collect = cfg.collect_trace and it == 0
-        if collect:
-            trace = np.zeros(len(flows) * per_flow)
-            bounds = [per_flow * i for i in range(len(flows) + 1)]
+        stations = [_StationQueue(fab.ingress_entries, svc)
+                    for _ in range(ns)]
+        state = self.state
 
         for fi, f in enumerate(flows):
             n_req = max(1, math.ceil(f.nbytes / rb))
@@ -115,20 +123,68 @@ def simulate_ref(nbytes: int, cfg: SimConfig) -> RunResult:
             res = state.access(si, page, cur)
             state.counters.add_request(res.klass, res.resolve - cur)
             state.counters.note_max(res.resolve - cur)
-            stall_sum += max(0.0, cur - nom)
-            if collect:
-                trace[fi * per_flow + i] = res.resolve - cur
+            self.stall_sum += max(0.0, cur - nom)
+            if trace is not None:
+                trace[bounds[fi_base + fi] + i] = res.resolve - cur
             st.admit(cur, res.resolve)
             done = res.resolve + fab.hbm_ns + fab.return_ns
             completion = max(completion, done)
             c = st.next_candidate()
             if c is not None:
                 heapq.heappush(heap, (c, si))
+        return completion
 
-        results.append(IterationResult(completion_ns=completion - t_iter))
-        t_iter = completion
 
-    return RunResult(iterations=results, counters=state.counters, config=cfg,
+def simulate_ref(nbytes: int, cfg: SimConfig) -> RunResult:
+    """Oracle simulation of ``cfg.collective`` (same flow sets as the engine)."""
+    fab = cfg.fabric
+    rb = fab.request_bytes
+    pattern = get_pattern(cfg.collective)
+    step_specs = pattern.steps(nbytes, fab)
+    dsts = simulated_dsts(pattern, step_specs, cfg.symmetric, fab)
+    targets: Dict[int, _RefTarget] = {d: _RefTarget(cfg) for d in dsts}
+
+    # Per-step flow counts of the representative target (for trace indexing)
+    # and the trace bounds, computed once — flow timing is rebuilt per step,
+    # the schedule shape never changes.
+    step_nflows = [len(flows_for_dst(specs, cfg, dsts[0], 0.0))
+                   for specs in step_specs]
+    trace = None
+    bounds: Optional[List[int]] = None
+    if cfg.collect_trace:
+        bounds = [0]
+        for specs in step_specs:
+            for f in flows_for_dst(specs, cfg, dsts[0], 0.0):
+                bounds.append(bounds[-1] + max(1, math.ceil(f.nbytes / rb)))
+        trace = np.zeros(bounds[-1])
+
+    results: List[IterationResult] = []
+    t = 0.0
+    for it in range(cfg.iterations):
+        t_iter = t
+        collect = cfg.collect_trace and it == 0
+        fi_base = 0
+        for si, specs in enumerate(step_specs):
+            comp = t
+            for d in dsts:
+                flows = flows_for_dst(specs, cfg, d, t_start=t)
+                if not flows:
+                    continue
+                trace_this = collect and d == dsts[0]
+                comp = max(comp, targets[d].run_step(
+                    flows,
+                    trace if trace_this else None,
+                    bounds, fi_base))
+            t = comp
+            fi_base += step_nflows[si]
+        results.append(IterationResult(completion_ns=t - t_iter))
+
+    ctr = targets[dsts[0]].state.counters
+    for d in dsts[1:]:
+        ctr.merge(targets[d].state.counters)
+    stall_sum = sum(tg.stall_sum for tg in targets.values())
+
+    return RunResult(iterations=results, counters=ctr, config=cfg,
                      collective_bytes=nbytes, trace=trace,
                      trace_flow_bounds=bounds,
-                     mean_stall_ns=stall_sum / max(1, state.counters.requests))
+                     mean_stall_ns=stall_sum / max(1, ctr.requests))

@@ -7,7 +7,7 @@ this module decides, per collective, the *schedule*:
     the producing compute, so destination-side cold-start cost (RAT walks on
     GPU fabrics; route/DMA setup on TPU ICI) is off the critical path.  This
     is the TPU-idiomatic analogue of the paper's fused pre-translation
-    kernels (DESIGN.md §3).
+    kernels (DESIGN.md §6).
   * ``n_chunks`` — double-buffered pipelining depth of the main transfer
     against expert compute (the analogue of software TLB prefetch).
   * ``per_peer_buffer_bytes`` — in-flight buffering per peer.  The paper's

@@ -10,8 +10,8 @@ The model is event-free: callers (the page-epoch engine and the request-level
 reference DES) invoke :meth:`TranslationState.access` in non-decreasing time
 order and the state machine returns the translation-resolve time plus the
 classification used for the paper's Fig. 7/8 breakdowns.  Determinism of the
-all-pairs workload makes this exact: arrival times never depend on
-translation outcomes (the fabric model is latency-additive; see DESIGN.md).
+streaming workloads makes this exact: arrival times never depend on
+translation outcomes (the fabric model is latency-additive; see DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -105,6 +105,20 @@ class Counters:
     def note_max(self, rat_ns: float) -> None:
         if rat_ns > self.rat_ns_max:
             self.rat_ns_max = rat_ns
+
+    def merge(self, other: "Counters") -> None:
+        """Accumulate another target GPU's counters into this one."""
+        self.requests += other.requests
+        for k in self.by_class:
+            self.by_class[k] += other.by_class[k]
+        self.rat_ns_sum += other.rat_ns_sum
+        self.rat_ns_max = max(self.rat_ns_max, other.rat_ns_max)
+        self.walks += other.walks
+        self.walk_mem_reads += other.walk_mem_reads
+        self.pwc_hits += other.pwc_hits
+        self.pwc_misses += other.pwc_misses
+        self.probes += other.probes
+        self.mshr_stall_ns += other.mshr_stall_ns
 
     @property
     def mean_rat_ns(self) -> float:

@@ -1,0 +1,76 @@
+"""Hypothesis property tests for the RAT simulator (repro.core).
+
+Kept separate from ``test_core_sim.py`` so the main suite still collects when
+``hypothesis`` is not installed — this module degrades to a skip.
+"""
+import dataclasses
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import ratsim, paper_config, simulate, MB  # noqa: E402
+from repro.core.config import TLBConfig  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(size_mb=st.sampled_from([1, 2, 4, 8, 16, 64]),
+       n=st.sampled_from([8, 16, 32]))
+def test_property_baseline_never_faster_than_ideal(size_mb, n):
+    c = ratsim.compare(size_mb * MB, n)
+    assert c.degradation >= 1.0 - 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(size_mb=st.sampled_from([1, 4, 16]), n=st.sampled_from([8, 16, 32]))
+def test_property_request_conservation(size_mb, n):
+    r = ratsim.run(size_mb * MB, n)
+    ctr = r.counters
+    assert sum(ctr.by_class.values()) == ctr.requests
+    fab = r.config.fabric
+    chunk = (size_mb * MB) // n
+    expected = (fab.n_gpus - 1) * math.ceil(chunk / fab.request_bytes)
+    assert ctr.requests == expected
+
+
+@settings(max_examples=10, deadline=None)
+@given(entries=st.sampled_from([64, 512, 4096]))
+def test_property_bigger_l2_never_hurts(entries):
+    cfg = paper_config(16)
+    tr = dataclasses.replace(
+        cfg.translation,
+        l2=TLBConfig(entries=entries, assoc=2, hit_latency_ns=100.0,
+                     mshr_entries=512))
+    big = simulate(4 * MB, cfg.replace(translation=tr)).completion_ns
+    tr_small = dataclasses.replace(
+        cfg.translation,
+        l2=TLBConfig(entries=16, assoc=2, hit_latency_ns=100.0,
+                     mshr_entries=512))
+    small = simulate(4 * MB, cfg.replace(translation=tr_small)).completion_ns
+    assert big <= small * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 16, 32, 64]))
+def test_property_ideal_completion_is_bandwidth_bound(n):
+    size = 64 * MB
+    cfg = paper_config(n).ideal()
+    r = simulate(size, cfg)
+    fab = cfg.fabric
+    chunk = size // n
+    n_req = math.ceil(chunk / fab.request_bytes)
+    stream = (n_req - 1) * fab.request_bytes * (n - 1) / fab.gpu_bw
+    expected = fab.oneway_ns + stream + fab.hbm_ns + fab.return_ns
+    assert r.completion_ns == pytest.approx(expected, rel=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(coll=st.sampled_from(["ring_allreduce", "rd_allreduce", "all_gather",
+                             "reduce_scatter", "broadcast",
+                             "hier_all_to_all"]),
+       size_mb=st.sampled_from([1, 4, 16]))
+def test_property_patterns_never_faster_than_ideal(coll, size_mb):
+    c = ratsim.compare(size_mb * MB, 16, collective=coll)
+    assert c.degradation >= 1.0 - 1e-12

@@ -1,0 +1,183 @@
+"""Tests for the collective traffic-pattern layer (repro.core.patterns).
+
+Three contracts per pattern:
+  1. Oracle equivalence — the page-epoch engine agrees with the request-level
+     reference DES on completion time, walk count and request count at small
+     collective sizes (same bound the seed all-to-all tests use).
+  2. Conservation — the emitted flow sets move exactly the collective's
+     analytic fabric volume.
+  3. The all-to-all default reproduces the seed engine bit-for-bit.
+"""
+import math
+
+import pytest
+
+from repro.core import (ratsim, paper_config, simulate, simulate_ref,
+                        get_pattern, analytic_volume, PATTERNS, KB, MB)
+from repro.core.config import FabricConfig
+
+ALL_PATTERNS = sorted(PATTERNS)
+NEW_PATTERNS = [p for p in ALL_PATTERNS if p != "all_to_all"]
+
+
+def _expected_requests(name, nbytes, cfg):
+    """Requests the simulator should count: flows into the simulated dsts."""
+    pattern = get_pattern(name)
+    steps = pattern.steps(nbytes, cfg.fabric)
+    if cfg.symmetric and pattern.symmetric:
+        dsts = {pattern.representative_dst(cfg.fabric)}
+    else:
+        dsts = {s.dst for step in steps for s in step}
+    rb = cfg.fabric.request_bytes
+    return sum(max(1, math.ceil(s.nbytes / rb))
+               for step in steps for s in step
+               if s.dst in dsts and s.nbytes > 0)
+
+
+# --------------------------------------------------- engine vs reference DES
+@pytest.mark.parametrize("name", ALL_PATTERNS)
+@pytest.mark.parametrize("n,size", [(8, 256 * KB), (8, 1 * MB), (16, 1 * MB)])
+def test_pattern_engine_matches_reference_des(name, n, size):
+    cfg = paper_config(n).replace(collective=name)
+    a = simulate(size, cfg)
+    b = simulate_ref(size, cfg)
+    assert a.completion_ns == pytest.approx(b.completion_ns, rel=0.05)
+    assert a.counters.walks == b.counters.walks
+    assert a.counters.requests == b.counters.requests
+
+
+@pytest.mark.parametrize("name", ["ring_allreduce", "rd_allreduce",
+                                  "hier_all_to_all"])
+def test_pattern_multipage_matches_reference_des(name):
+    # 4 MB spans multiple 2 MB pages -> mid-stream cold walks per step.
+    cfg = paper_config(8).replace(collective=name)
+    a = simulate(4 * MB, cfg)
+    b = simulate_ref(4 * MB, cfg)
+    assert a.completion_ns == pytest.approx(b.completion_ns, rel=0.05)
+    assert a.counters.walks == b.counters.walks
+
+
+@pytest.mark.parametrize("name", ALL_PATTERNS)
+def test_pattern_ideal_matches_reference_des(name):
+    cfg = paper_config(8).replace(collective=name).ideal()
+    a = simulate(1 * MB, cfg)
+    b = simulate_ref(1 * MB, cfg)
+    assert a.completion_ns == pytest.approx(b.completion_ns, rel=0.005)
+
+
+# -------------------------------------------------------------- conservation
+@pytest.mark.parametrize("name", ALL_PATTERNS)
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_flow_sets_move_analytic_volume(name, n):
+    fab = FabricConfig(n_gpus=n)
+    nbytes = 8 * MB
+    pattern = get_pattern(name)
+    emitted = sum(s.nbytes for step in pattern.steps(nbytes, fab)
+                  for s in step)
+    assert emitted == analytic_volume(name, nbytes, fab)
+    assert emitted == pattern.total_bytes(nbytes, fab)
+
+
+@pytest.mark.parametrize("name", ALL_PATTERNS)
+def test_request_conservation_through_engine(name):
+    cfg = paper_config(16).replace(collective=name)
+    r = simulate(2 * MB, cfg)
+    ctr = r.counters
+    assert sum(ctr.by_class.values()) == ctr.requests
+    assert ctr.requests == _expected_requests(name, 2 * MB, cfg)
+
+
+@pytest.mark.parametrize("name", ALL_PATTERNS)
+def test_flow_specs_well_formed(name):
+    fab = FabricConfig(n_gpus=16)
+    for step in get_pattern(name).steps(4 * MB, fab):
+        for s in step:
+            assert 0 <= s.src < fab.n_gpus
+            assert 0 <= s.dst < fab.n_gpus
+            assert s.src != s.dst
+            assert s.nbytes > 0
+            assert s.offset >= 0
+
+
+# --------------------------------------------------- seed behavior unchanged
+# Golden values captured from the seed (pre-pattern) engine; the default
+# all-to-all must reproduce them bit-for-bit.
+SEED_GOLDEN = [
+    # (size, n_gpus, baseline_ns, ideal_ns, requests, walks)
+    (1 * MB, 16, 3890.0, 2802.0, 3840, 1),
+    (4 * MB, 8, 5805.2, 4482.64, 14336, 2),
+    (16 * MB, 32, 13642.64, 12343.119999999999, 63488, 8),
+]
+
+
+@pytest.mark.parametrize("size,n,base,ideal,reqs,walks", SEED_GOLDEN)
+def test_all_to_all_default_bit_for_bit(size, n, base, ideal, reqs, walks):
+    r = simulate(size, paper_config(n))
+    i = simulate(size, paper_config(n).ideal())
+    assert r.completion_ns == base
+    assert i.completion_ns == ideal
+    assert r.counters.requests == reqs
+    assert r.counters.walks == walks
+
+
+def test_explicit_all_to_all_equals_default():
+    a = simulate(1 * MB, paper_config(16))
+    b = ratsim.run(1 * MB, 16, collective="all_to_all")
+    assert a.completion_ns == b.completion_ns
+    assert a.counters.requests == b.counters.requests
+
+
+# ------------------------------------------------------------------ the API
+@pytest.mark.parametrize("name", NEW_PATTERNS)
+def test_ratsim_compare_collective_axis(name):
+    c = ratsim.compare(1 * MB, 16, collective=name)
+    assert c.baseline.completion_ns > 0
+    assert c.degradation >= 1.0 - 1e-12
+
+
+def test_sweep_grows_collective_axis():
+    out = ratsim.sweep([1 * MB], [8, 16],
+                       collectives=["all_to_all", "ring_allreduce"])
+    assert set(out) == {("all_to_all", 8, 1 * MB), ("all_to_all", 16, 1 * MB),
+                       ("ring_allreduce", 8, 1 * MB),
+                       ("ring_allreduce", 16, 1 * MB)}
+    # legacy keys without the axis
+    legacy = ratsim.sweep([1 * MB], [8])
+    assert set(legacy) == {(8, 1 * MB)}
+
+
+def test_unknown_collective_raises():
+    with pytest.raises(ValueError, match="unknown collective"):
+        ratsim.run(1 * MB, 16, collective="nope")
+
+
+def test_rd_allreduce_requires_power_of_two():
+    with pytest.raises(ValueError, match="power-of-two"):
+        ratsim.run(1 * MB, 12, collective="rd_allreduce")
+
+
+def test_broadcast_forces_every_target():
+    # Asymmetric pattern: even under symmetric config every receiver is
+    # simulated, so n-1 GPUs each count one full-buffer flow.
+    cfg = paper_config(8).replace(collective="broadcast")
+    assert cfg.symmetric
+    r = simulate(1 * MB, cfg)
+    rb = cfg.fabric.request_bytes
+    assert r.counters.requests == 7 * math.ceil(1 * MB / rb)
+
+
+def test_small_collectives_more_rat_sensitive_than_large():
+    # The paper's Fig-4 shape holds for every pattern: degradation shrinks
+    # as the collective grows and TLBs warm.
+    for name in ALL_PATTERNS:
+        small = ratsim.compare(1 * MB, 16, collective=name).degradation
+        large = ratsim.compare(64 * MB, 16, collective=name).degradation
+        assert large < small or large == pytest.approx(small, abs=1e-3), name
+
+
+def test_ring_amortizes_cold_walks_vs_all_to_all():
+    # Headline of the fig12 sweep: one flow per step amortizes the single
+    # cold walk, all-pairs pays it on every flow concurrently.
+    a2a = ratsim.compare(1 * MB, 16).degradation
+    ring = ratsim.compare(1 * MB, 16, collective="ring_allreduce").degradation
+    assert ring < a2a
