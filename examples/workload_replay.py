@@ -1,0 +1,66 @@
+"""Workload replay: warm-vs-cold Link-TLB trajectories of real model steps.
+
+The paper prices free-standing collectives from cold TLBs; real serving
+fires *sequences* — one MoE dispatch/combine all-to-all per layer per
+decoded token.  This example replays model-derived sequences through
+persistent-TLB sessions (repro.core.session + repro.workloads) and prints:
+
+  1. the session API itself: cold vs warm vs idle-aged reruns;
+  2. a granite-MoE decode loop (token 0 pays the cold walks, later tokens
+     ride warm TLBs);
+  3. the TLB-reach contrast: qwen3-moe's per-layer buffers overflow the L2
+     Link TLB, so even steady-state tokens keep walking.
+
+    PYTHONPATH=src python examples/workload_replay.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import ratsim, paper_config, MB
+
+
+def main():
+    print("=== SimSession: translation state persists across collectives ===")
+    s = ratsim.session(16)
+    cold = s.run(1 * MB)
+    warm = s.run(1 * MB)
+    moved = s.run(1 * MB, base_offset=64 * MB)     # fresh buffer: cold again
+    print(f"  cold  run: {cold.completion_ns/1e3:8.2f} us "
+          f"({cold.counters.walks} page walks)")
+    print(f"  warm  run: {warm.completion_ns/1e3:8.2f} us "
+          f"({warm.counters.walks} page walks)")
+    print(f"  new buffer: {moved.completion_ns/1e3:7.2f} us "
+          f"({moved.counters.walks} page walks — TLB cold, PWC still warm)")
+
+    aged = ratsim.session(16, cfg=paper_config(16).replace(
+        tlb_retention_ns=1e6))
+    aged.run(1 * MB)
+    r = aged.run(1 * MB, gap_ns=5e6)               # long idle: flushed
+    print(f"  after 5ms idle (1ms retention): {r.completion_ns/1e3:.2f} us "
+          f"({r.counters.walks} page walks — aged out)\n")
+
+    from repro.workloads import derive_workload, replay
+
+    print("=== granite-moe decode: per-token degradation trajectory ===")
+    trace = derive_workload("granite-moe-1b-a400m", "decode_32k",
+                            n_gpus=16, n_steps=4)
+    rep = replay(trace)
+    for st in rep.steps:
+        print(f"  token {st.step}: comm {st.comm_ns/1e3:8.2f} us, "
+              f"degradation {st.degradation:.4f}, walks {st.walks}")
+    print(f"  cold {rep.cold_degradation:.4f} vs steady "
+          f"{rep.steady_degradation:.4f} — warm TLBs erase the cold tax\n")
+
+    print("=== qwen3-moe-235b: working set exceeds L2 Link-TLB reach ===")
+    trace = derive_workload("qwen3-moe-235b-a22b", "decode_32k",
+                            n_gpus=16, n_steps=2)
+    rep = replay(trace)
+    for st in rep.steps:
+        print(f"  token {st.step}: degradation {st.degradation:.4f}, "
+              f"walks {st.walks}")
+    print("  steady-state walks stay high: capacity misses, not cold misses")
+
+
+if __name__ == "__main__":
+    main()

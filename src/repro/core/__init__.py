@@ -9,13 +9,15 @@ from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
 from .engine import simulate, RunResult
 from .patterns import (CollectivePattern, FlowSpec, PATTERNS, get_pattern,
                        analytic_volume)
-from .ratsim import run, compare, sweep, Comparison
-from .ref_des import simulate_ref
+from .ratsim import run, compare, session, sweep, Comparison
+from .ref_des import RefSession, simulate_ref
+from .session import CollectiveResult, SimSession
 
 __all__ = [
     "SimConfig", "FabricConfig", "TranslationConfig", "TLBConfig",
     "PWCConfig", "PreTranslationConfig", "PrefetchConfig", "paper_config",
-    "KB", "MB", "GB", "simulate", "RunResult", "run", "compare", "sweep",
-    "Comparison", "simulate_ref", "CollectivePattern", "FlowSpec",
+    "KB", "MB", "GB", "simulate", "RunResult", "run", "compare", "session",
+    "sweep", "Comparison", "simulate_ref", "RefSession", "SimSession",
+    "CollectiveResult", "CollectivePattern", "FlowSpec",
     "PATTERNS", "get_pattern", "analytic_volume",
 ]

@@ -150,6 +150,11 @@ class SimConfig:
     # "hier_all_to_all".
     collective: str = "all_to_all"
     iterations: int = 1          # back-to-back collective iterations
+    # Session replay (repro.core.session): an inter-collective idle gap of at
+    # least this many ns flushes all cached translations, modelling eviction
+    # by competing traffic while the pod is quiet.  None => TLB entries
+    # survive arbitrarily long gaps (the hierarchy has no self-decay).
+    tlb_retention_ns: Optional[float] = None
     symmetric: bool = True       # simulate a single target GPU (symmetric
                                  # patterns load every GPU identically);
                                  # False simulates every target

@@ -30,7 +30,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .config import SimConfig
-from .patterns import FlowSpec, get_pattern, simulated_dsts
+from .patterns import FlowSpec
 from .tlb import TranslationState, Counters, L1_HIT, L1_HUM, INF
 
 
@@ -126,6 +126,78 @@ def flows_for_dst(specs: List[FlowSpec], cfg: SimConfig, dst: int,
     return flows
 
 
+def epoch_spans(flows: List[Flow], rb: int, oneway_ns: float,
+                page_bytes: int):
+    """(first_arrival, flow_idx, page, i0, i1) spans, sorted by arrival.
+
+    One span per (flow, page): requests ``i0..i1-1`` of flow ``flow_idx``
+    touch ``page``.  Shared by the epoch engine and the reference DES's
+    probe-schedule construction so both issue identical prefetch probes.
+    """
+    eps = []
+    for fi, f in enumerate(flows):
+        n_req = max(1, math.ceil(f.nbytes / rb))
+        a0 = f.t_start + oneway_ns
+        first_page = f.base_addr // page_bytes
+        last_page = (f.base_addr + f.nbytes - 1) // page_bytes
+        for page in range(first_page, last_page + 1):
+            lo = max(f.base_addr, page * page_bytes)
+            hi = min(f.base_addr + f.nbytes, (page + 1) * page_bytes)
+            i0 = (lo - f.base_addr) // rb
+            i1 = min(n_req, math.ceil((hi - f.base_addr) / rb))
+            if i1 <= i0:
+                continue
+            eps.append((a0 + i0 * f.delta_ns, fi, page, i0, i1))
+    eps.sort()
+    return eps
+
+
+def probe_station(f: Flow, page: int, page_bytes: int, rb: int,
+                  ns: int) -> int:
+    """Station where ``page``'s first real request of flow ``f`` lands.
+
+    Request ``i`` of a flow stripes to station ``(i + f.stripe) % ns``; the
+    first request touching ``page`` has index ``i0 = (lo - base) // rb``
+    (``lo`` = first byte of the page inside the flow's range).  Translation
+    probes must target exactly this station so they warm the L1 that the
+    page's first data request will actually query.
+    """
+    lo = max(f.base_addr, page * page_bytes)
+    i0 = (lo - f.base_addr) // rb
+    return (i0 + f.stripe) % ns
+
+
+def pretranslate_probes(flows: List[Flow], cfg: SimConfig):
+    """Yield (t, station, page) pre-translation probes for one collective.
+
+    Paper §6.1: probes issue during the preceding compute window, starting
+    ``lead_time_ns`` before the collective, paced every
+    ``probe_issue_interval_ns``, warming the first ``pages_per_flow`` pages
+    of every flow (0 => all).  Single source of truth for the engine and
+    the reference DES, so oracle-equivalence holds by construction.
+    """
+    pre = cfg.pretranslation
+    fab = cfg.fabric
+    ns = fab.stations_per_gpu
+    rb = fab.request_bytes
+    page_bytes = cfg.translation.page_bytes
+    if not flows:
+        return
+    t = flows[0].t_start - pre.lead_time_ns
+    k = 0
+    for f in flows:
+        first_page = f.base_addr // page_bytes
+        last_page = (f.base_addr + f.nbytes - 1) // page_bytes
+        n_pages = last_page - first_page + 1
+        limit = n_pages if pre.pages_per_flow <= 0 else min(
+            n_pages, pre.pages_per_flow)
+        for j in range(limit):
+            page = first_page + j
+            yield (t + k * pre.probe_issue_interval_ns,
+                   probe_station(f, page, page_bytes, rb, ns), page)
+            k += 1
+
+
 @dataclass
 class _Station:
     """Per-station ingress bookkeeping for the backpressure model."""
@@ -156,24 +228,8 @@ class EpochEngine:
     def _epochs(self, flows: List[Flow]):
         """Yield (first_arrival, flow_idx, page, i0, i1) sorted by time."""
         fab = self.cfg.fabric
-        rb = fab.request_bytes
-        eps = []
-        for fi, f in enumerate(flows):
-            n_req = max(1, math.ceil(f.nbytes / rb))
-            a0 = f.t_start + fab.oneway_ns
-            # page boundaries within [base, base+nbytes)
-            first_page = f.base_addr // self.page_bytes
-            last_page = (f.base_addr + f.nbytes - 1) // self.page_bytes
-            for page in range(first_page, last_page + 1):
-                lo = max(f.base_addr, page * self.page_bytes)
-                hi = min(f.base_addr + f.nbytes, (page + 1) * self.page_bytes)
-                i0 = (lo - f.base_addr) // rb
-                i1 = min(n_req, math.ceil((hi - f.base_addr) / rb))
-                if i1 <= i0:
-                    continue
-                eps.append((a0 + i0 * f.delta_ns, fi, page, i0, i1))
-        eps.sort()
-        return eps
+        return epoch_spans(flows, fab.request_bytes, fab.oneway_ns,
+                           self.page_bytes)
 
     # -- core ----------------------------------------------------------------
     def run_iteration(self, flows: List[Flow], collect_trace: bool,
@@ -306,34 +362,26 @@ class EpochEngine:
 
     # -- optimizations ---------------------------------------------------------
     def _pretranslate(self, flows: List[Flow]) -> None:
-        """Paper §6.1: fused pre-translation during the preceding compute."""
-        pre = self.cfg.pretranslation
-        ns = self.cfg.fabric.stations_per_gpu
-        t = flows[0].t_start - pre.lead_time_ns
-        k = 0
-        for f in flows:
-            first_page = f.base_addr // self.page_bytes
-            last_page = (f.base_addr + f.nbytes - 1) // self.page_bytes
-            n_pages = last_page - first_page + 1
-            limit = n_pages if pre.pages_per_flow <= 0 else min(
-                n_pages, pre.pages_per_flow)
-            for j in range(limit):
-                st = (f.stripe + j) % ns
-                self.state.access(st, first_page + j,
-                                  t + k * pre.probe_issue_interval_ns,
-                                  is_probe=True)
-                self.state.counters.probes += 1
-                k += 1
+        """Paper §6.1: fused pre-translation during the preceding compute.
+
+        Probes target the station where each page's *first data request*
+        will land (:func:`probe_station`), so the probe warms exactly the L1
+        that request queries.
+        """
+        for (t, st, page) in pretranslate_probes(flows, self.cfg):
+            self.state.access(st, page, t, is_probe=True)
+            self.state.counters.probes += 1
 
     def _prefetch(self, f: Flow, page: int, t: float) -> None:
         """Paper §6.2: software-guided next-page TLB prefetch."""
-        ns = self.cfg.fabric.stations_per_gpu
+        fab = self.cfg.fabric
+        ns = fab.stations_per_gpu
         last_page = (f.base_addr + f.nbytes - 1) // self.page_bytes
         for j in range(1, self.cfg.prefetch.depth + 1):
             p = page + j
             if p > last_page:
                 break
-            st = (f.stripe + p) % ns
+            st = probe_station(f, p, self.page_bytes, fab.request_bytes, ns)
             self.state.access(st, p, t, is_probe=True)
             self.state.counters.probes += 1
 
@@ -341,63 +389,19 @@ class EpochEngine:
 def simulate(nbytes: int, cfg: SimConfig) -> RunResult:
     """Simulate ``cfg.collective`` of ``nbytes`` per GPU under ``cfg``.
 
-    The pattern layer supplies per-step flow sets; steps are dependency
-    barriers (step k+1's flows start at step k's completion).  Symmetric
-    patterns simulate one representative target (exact — every GPU is loaded
-    identically); asymmetric ones (broadcast) simulate every receiving
-    target regardless of ``cfg.symmetric``.
+    Thin wrapper over :class:`repro.core.session.SimSession`: one session is
+    created, ``cfg.iterations`` back-to-back invocations of the collective
+    are replayed through it (translation state stays warm across
+    iterations, exactly as the pre-session engine behaved), and the
+    aggregate is returned.  The pattern layer supplies per-step flow sets;
+    steps are dependency barriers (step k+1's flows start at step k's
+    completion).  Symmetric patterns simulate one representative target
+    (exact — every GPU is loaded identically); asymmetric ones (broadcast)
+    simulate every receiving target regardless of ``cfg.symmetric``.
     """
-    fab = cfg.fabric
-    pattern = get_pattern(cfg.collective)
-    step_specs = pattern.steps(nbytes, fab)
-    dsts = simulated_dsts(pattern, step_specs, cfg.symmetric, fab)
-    results: List[IterationResult] = []
-    engines = [EpochEngine(cfg, dst=d) for d in dsts]
-    rb = fab.request_bytes
-    flow_sizes: List[int] = []  # request count per traced flow, across steps
-    t = 0.0
-    for it in range(cfg.iterations):
-        t_iter = t
-        collect = cfg.collect_trace and it == 0
-        for si, specs in enumerate(step_specs):
-            comp = t
-            for eng in engines:
-                flows = flows_for_dst(specs, cfg, eng.dst, t_start=t)
-                if not flows:
-                    continue
-                # Trace only the representative (first) target, as the seed
-                # engine did.
-                trace_this = collect and eng is engines[0]
-                fi_base = len(flow_sizes)
-                if trace_this:
-                    flow_sizes.extend(
-                        max(1, math.ceil(f.nbytes / rb)) for f in flows)
-                comp = max(comp, eng.run_iteration(
-                    flows, trace_this, fi_base=fi_base, first_step=si == 0))
-            t = comp
-        results.append(IterationResult(completion_ns=t - t_iter))
+    from .session import SimSession  # local import: session builds on engine
 
-    # Merge counters (symmetric mode already represents one GPU; full mode
-    # aggregates every target).
-    ctr = engines[0].state.counters
-    for eng in engines[1:]:
-        ctr.merge(eng.state.counters)
-
-    trace = None
-    bounds = None
-    if cfg.collect_trace:
-        bounds = [0]
-        for sz in flow_sizes:
-            bounds.append(bounds[-1] + sz)
-        trace = np.zeros(bounds[-1])
-        for (fi, i0, arr) in engines[0].trace_chunks:
-            trace[bounds[fi] + i0: bounds[fi] + i0 + len(arr)] = arr
-
-    # ctr already aggregates every engine (merge above), so it is the
-    # denominator; summing per-engine counters here would double-count.
-    stall_total = sum(e.stall_sum for e in engines)
-    stall_mean = stall_total / (ctr.requests or 1)
-
-    return RunResult(iterations=results, counters=ctr, config=cfg,
-                     collective_bytes=nbytes, trace=trace,
-                     trace_flow_bounds=bounds, mean_stall_ns=stall_mean)
+    sess = SimSession(cfg)
+    for _ in range(cfg.iterations):
+        sess.run(nbytes)
+    return sess.result(collective_bytes=nbytes)

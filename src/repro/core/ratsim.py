@@ -7,20 +7,33 @@ Typical use::
     print(r.degradation, r.baseline.mean_rat_ns)
     r = ratsim.compare(1 << 20, 16, collective="ring_allreduce")
 
+    s = ratsim.session(16)                       # persistent-TLB session
+    cold = s.run(1 << 20)                        # cold Link TLBs
+    warm = s.run(1 << 20)                        # same pages, warm TLBs
+
 All figures of the paper are produced through this module (see benchmarks/).
 The ``collective=`` axis selects any registered traffic pattern
 (:mod:`repro.core.patterns`); the default is the paper's all-pairs AllToAll.
+``sweep`` fans its grid out over a process pool (``workers=0`` forces the
+serial path; results are keyed and valued identically either way) and
+optionally memoizes points in a caller-supplied cache mapping.
 """
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
+import os
+import sys
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, List, MutableMapping, Optional, Tuple
 
 from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
                      PreTranslationConfig, PrefetchConfig, paper_config,
                      KB, MB, GB)
 from .engine import simulate, RunResult
+from .session import SimSession
 
 
 @dataclass
@@ -63,16 +76,80 @@ def compare(nbytes: int, n_gpus: int = 16, *,
                       ideal=simulate(nbytes, cfg.ideal()))
 
 
+def session(n_gpus: int = 16, *, collective: Optional[str] = None,
+            cfg: Optional[SimConfig] = None, **cfg_kw) -> SimSession:
+    """A persistent-TLB session on a fresh pod (repro.core.session)."""
+    return SimSession(_resolve_cfg(n_gpus, collective, cfg, cfg_kw))
+
+
+# ---------------------------------------------------------------- sweeps
+# Aggregate grid bytes below which sweep() stays serial: worker spawn costs
+# hundreds of ms each, which only the paper's large grids amortize.
+_PARALLEL_MIN_BYTES = 64 * MB
+
+
+def _cache_key(nbytes: int, cfg: SimConfig) -> Tuple[int, str]:
+    """Stable fingerprint of one sweep point.
+
+    ``SimConfig`` is a tree of frozen dataclasses of primitives/tuples, so
+    its repr is deterministic and total — two configs compare equal iff
+    their reprs do.
+    """
+    return (nbytes, repr(cfg))
+
+
+def _sweep_point(task) -> Tuple[tuple, Comparison]:
+    key, nbytes, cfg = task
+    return key, Comparison(baseline=simulate(nbytes, cfg),
+                           ideal=simulate(nbytes, cfg.ideal()))
+
+
+def _spawnable() -> bool:
+    """Whether spawn-context workers can bootstrap from this parent.
+
+    Spawn re-imports ``__main__`` in the child; a parent run from stdin or
+    an embedded interpreter (``python - <<EOF``) has no importable main and
+    every worker would die at bootstrap — stay serial instead.
+    """
+    main = sys.modules.get("__main__")
+    if main is None:
+        return False
+    if getattr(main, "__spec__", None) is not None:   # python -m ...
+        return True
+    path = getattr(main, "__file__", None)
+    return bool(path) and os.path.exists(path)
+
+
 def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
           base_cfg: Optional[SimConfig] = None,
+          workers: Optional[int] = None,
+          cache: Optional[MutableMapping] = None,
           **cfg_kw) -> Dict[tuple, Comparison]:
     """The paper's main sweep (Figs. 4 and 5), optionally per collective.
 
     Without ``collectives`` the result keys are ``(n_gpus, size)`` as in the
     seed API; with a list of pattern names they grow a leading axis:
     ``(collective, n_gpus, size)``.
+
+    Points are independent, so large grids fan out over a
+    ``concurrent.futures`` process pool — ``workers=None`` sizes the pool to
+    the host (capped by the task count) but stays serial below a total-work
+    threshold (worker spawn costs dwarf small grids); an explicit
+    ``workers>=2`` always uses the pool, ``workers=0`` forces the serial
+    in-process path.  All paths produce identical keys and identical
+    numbers (each point is one deterministic ``simulate`` pair).  ``cache``
+    is an optional mapping memoizing points across calls, keyed by
+    ``(nbytes, repr(cfg))``; pass the same dict to successive sweeps (or
+    figure scripts) to never price the same point twice.
+
+    Standard spawn semantics apply: a *script* that calls ``sweep()`` at
+    top level must guard it with ``if __name__ == "__main__":`` (workers
+    re-import the main module); stdin/embedded parents with no importable
+    main fall back to the serial path automatically.
     """
-    out = {}
+    out: Dict[tuple, Comparison] = {}
+    tasks: List[tuple] = []
+    seen_inflight: Dict[tuple, tuple] = {}
     colls = list(collectives) if collectives is not None else [None]
     for coll in colls:
         for n in gpu_counts:
@@ -83,6 +160,46 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
                 cfg = (base_cfg.replace(fabric=dataclasses.replace(
                            base_cfg.fabric, n_gpus=n))
                        if base_cfg is not None else paper_config(n, **cfg_kw))
-                cmp_ = compare(s, n, collective=coll, cfg=cfg)
-                out[(n, s) if collectives is None else (coll, n, s)] = cmp_
+                if coll is not None:
+                    cfg = cfg.replace(collective=coll)
+                key = (n, s) if collectives is None else (coll, n, s)
+                ck = _cache_key(s, cfg)
+                if cache is not None and ck in cache:
+                    out[key] = cache[ck]
+                elif ck in seen_inflight:
+                    seen_inflight[ck] += (key,)
+                else:
+                    seen_inflight[ck] = (key,)
+                    tasks.append((key, s, cfg, ck))
+
+    results: List[Tuple[tuple, Comparison]] = []
+    pool_tasks = [(key, s, cfg) for (key, s, cfg, _ck) in tasks]
+    n_workers = (min(len(pool_tasks), os.cpu_count() or 1)
+                 if workers is None else workers)
+    # Spawning workers costs interpreter+numpy startup each; only grids with
+    # enough simulation work amortize it.  An explicit workers= request
+    # always gets the pool.
+    big_enough = (workers is not None
+                  or sum(s for (_k, s, _c) in pool_tasks) >= _PARALLEL_MIN_BYTES)
+    if n_workers >= 2 and len(pool_tasks) > 1 and big_enough and _spawnable():
+        try:
+            # Spawned (not forked) workers: the parent process may have jax
+            # (multithreaded) loaded, and forking a threaded process can
+            # deadlock.  Workers only import repro.core (numpy-only).
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=n_workers,
+                                     mp_context=ctx) as pool:
+                results = list(pool.map(_sweep_point, pool_tasks))
+        except (OSError, BrokenProcessPool):
+            # No usable subprocess support (sandboxed spawn, killed
+            # bootstrap...): fall back to the serial path below.
+            results = []
+    if not results and pool_tasks:
+        results = [_sweep_point(t) for t in pool_tasks]
+
+    for (key, cmp_), (_k, s, cfg, ck) in zip(results, tasks):
+        for k in seen_inflight[ck]:
+            out[k] = cmp_
+        if cache is not None:
+            cache[ck] = cmp_
     return out

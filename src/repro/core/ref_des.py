@@ -5,11 +5,17 @@ Simulates every individual request through the same
 but with explicit per-station in-order FIFOs and slot-accurate ingress
 buffering instead of closed-form epoch expansion.  Replays exactly the flow
 sets the pattern layer (:mod:`repro.core.patterns`) emits — one station-queue
-episode per collective step, barriered on the previous step's completion — so
-oracle-equivalence tests bind for every collective, not just the paper's
-all-pairs AllToAll.  Used by the test suite to validate
-:mod:`repro.core.engine` at small collective sizes; too slow for the paper's
-4 GB sweeps (that is the point of the epoch engine).
+episode per collective step, barriered on the previous step's completion —
+and, when the latency-hiding optimizations are enabled, issues the *same*
+pre-translation / prefetch probe schedule the engine issues (built from the
+shared :func:`~repro.core.engine.epoch_spans` /
+:func:`~repro.core.engine.probe_station` helpers), so oracle-equivalence
+tests bind for the optimization paths too.
+
+:class:`RefSession` mirrors :class:`repro.core.session.SimSession` — a
+persistent-TLB session replaying a sequence of collectives — and
+:func:`simulate_ref` is the single-collective wrapper over it.  Too slow for
+the paper's 4 GB sweeps (that is the point of the epoch engine).
 """
 from __future__ import annotations
 
@@ -20,9 +26,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .config import SimConfig
-from .engine import Flow, RunResult, IterationResult, flows_for_dst
-from .patterns import get_pattern, simulated_dsts
-from .tlb import TranslationState
+from .engine import (Flow, IterationResult, RunResult, epoch_spans,
+                     flows_for_dst, pretranslate_probes, probe_station)
+from .session import CollectiveResult, resolve_collective
+from .tlb import Counters, TranslationState
 
 
 class _StationQueue:
@@ -65,6 +72,43 @@ class _StationQueue:
         heapq.heappush(self.retires, retire)
 
 
+def _probe_schedule(flows: List[Flow], cfg: SimConfig,
+                    first_step: bool) -> List[Tuple[float, int, int]]:
+    """(t, station, page) probes for one step, identical to the engine's.
+
+    Pre-translation probes (paper §6.1) fire only on the first step of a
+    collective, during the preceding compute window; prefetch probes (§6.2)
+    fire at each page-epoch's first arrival for the following ``depth``
+    pages.  Stations are aligned to each page's first data request
+    (:func:`probe_station`).
+    """
+    fab = cfg.fabric
+    ns = fab.stations_per_gpu
+    rb = fab.request_bytes
+    page_bytes = cfg.translation.page_bytes
+    probes: List[Tuple[float, int, int]] = []
+    if not cfg.translation.enabled:
+        return probes
+
+    if cfg.pretranslation.enabled and first_step:
+        probes.extend(pretranslate_probes(flows, cfg))
+
+    if cfg.prefetch.enabled:
+        for (t_first, fi, page, _i0, _i1) in epoch_spans(
+                flows, rb, fab.oneway_ns, page_bytes):
+            f = flows[fi]
+            last_page = (f.base_addr + f.nbytes - 1) // page_bytes
+            for j in range(1, cfg.prefetch.depth + 1):
+                p = page + j
+                if p > last_page:
+                    break
+                probes.append((t_first,
+                               probe_station(f, p, page_bytes, rb, ns), p))
+
+    probes.sort()
+    return probes
+
+
 class _RefTarget:
     """One target GPU's DES state (translation persists across steps)."""
 
@@ -74,7 +118,8 @@ class _RefTarget:
                                       cfg.fabric.stations_per_gpu)
         self.stall_sum = 0.0
 
-    def run_step(self, flows: List[Flow], trace: Optional[np.ndarray],
+    def run_step(self, flows: List[Flow], first_step: bool,
+                 trace: Optional[np.ndarray],
                  bounds: Optional[List[int]], fi_base: int) -> float:
         """Replay one step's flows request-by-request; returns completion.
 
@@ -92,6 +137,9 @@ class _RefTarget:
                     for _ in range(ns)]
         state = self.state
 
+        probes = _probe_schedule(flows, cfg, first_step)
+        pi = 0
+
         for fi, f in enumerate(flows):
             n_req = max(1, math.ceil(f.nbytes / rb))
             a0 = f.t_start + fab.oneway_ns
@@ -103,7 +151,9 @@ class _RefTarget:
             st.sort()
 
         # Global event loop in admission-time order (translation state must
-        # observe accesses in non-decreasing time).
+        # observe accesses in non-decreasing time).  Probes interleave by
+        # issue time: every probe at or before the next admission fires
+        # first, exactly as the engine issues them ahead of the stream.
         heap = []
         for si, st in enumerate(stations):
             c = st.next_candidate()
@@ -119,6 +169,11 @@ class _RefTarget:
             if cur > adm + 1e-9:
                 heapq.heappush(heap, (cur, si))  # stale entry; re-key
                 continue
+            while pi < len(probes) and probes[pi][0] <= cur:
+                pt, pst, ppage = probes[pi]
+                state.access(pst, ppage, pt, is_probe=True)
+                state.counters.probes += 1
+                pi += 1
             nom, fi, page, i = st.reqs[st.ptr]
             res = state.access(si, page, cur)
             state.counters.add_request(res.klass, res.resolve - cur)
@@ -132,59 +187,124 @@ class _RefTarget:
             c = st.next_candidate()
             if c is not None:
                 heapq.heappush(heap, (c, si))
+        # Probes scheduled beyond the last admission still fire (they warm
+        # state for subsequent steps/collectives of the session).
+        while pi < len(probes):
+            pt, pst, ppage = probes[pi]
+            state.access(pst, ppage, pt, is_probe=True)
+            state.counters.probes += 1
+            pi += 1
         return completion
 
 
-def simulate_ref(nbytes: int, cfg: SimConfig) -> RunResult:
-    """Oracle simulation of ``cfg.collective`` (same flow sets as the engine)."""
-    fab = cfg.fabric
-    rb = fab.request_bytes
-    pattern = get_pattern(cfg.collective)
-    step_specs = pattern.steps(nbytes, fab)
-    dsts = simulated_dsts(pattern, step_specs, cfg.symmetric, fab)
-    targets: Dict[int, _RefTarget] = {d: _RefTarget(cfg) for d in dsts}
+class RefSession:
+    """Oracle mirror of :class:`repro.core.session.SimSession`.
 
-    # Per-step flow counts of the representative target (for trace indexing)
-    # and the trace bounds, computed once — flow timing is rebuilt per step,
-    # the schedule shape never changes.
-    step_nflows = [len(flows_for_dst(specs, cfg, dsts[0], 0.0))
-                   for specs in step_specs]
-    trace = None
-    bounds: Optional[List[int]] = None
-    if cfg.collect_trace:
-        bounds = [0]
-        for specs in step_specs:
-            for f in flows_for_dst(specs, cfg, dsts[0], 0.0):
-                bounds.append(bounds[-1] + max(1, math.ceil(f.nbytes / rb)))
-        trace = np.zeros(bounds[-1])
+    Same public surface (``run`` / ``idle`` / ``result`` / ``records``),
+    request-level physics.  Session-equivalence tests replay identical call
+    sequences through both and compare.
+    """
 
-    results: List[IterationResult] = []
-    t = 0.0
-    for it in range(cfg.iterations):
-        t_iter = t
-        collect = cfg.collect_trace and it == 0
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.t = 0.0
+        self.records: List[CollectiveResult] = []
+        self._targets: Dict[int, _RefTarget] = {}
+        self._trace: Optional[np.ndarray] = None
+        self._bounds: Optional[List[int]] = None
+
+    def idle(self, gap_ns: float) -> None:
+        if gap_ns <= 0:
+            return
+        self.t += gap_ns
+        retention = self.cfg.tlb_retention_ns
+        if retention is not None and gap_ns >= retention:
+            for tg in self._targets.values():
+                tg.state.flush()
+
+    def _target(self, dst: int) -> _RefTarget:
+        tg = self._targets.get(dst)
+        if tg is None:
+            tg = self._targets[dst] = _RefTarget(self.cfg)
+        return tg
+
+    def _counters_total(self) -> Counters:
+        total = Counters()
+        for tg in self._targets.values():
+            total.merge(tg.state.counters)
+        return total
+
+    def run(self, nbytes: int, *, collective: Optional[str] = None,
+            n_gpus: Optional[int] = None, gap_ns: float = 0.0,
+            base_offset: int = 0, label: str = "") -> CollectiveResult:
+        cfg = self.cfg
+        fab = cfg.fabric
+        if gap_ns:
+            self.idle(gap_ns)
+        name, fab_n, step_specs, dsts = resolve_collective(
+            cfg, nbytes, collective, n_gpus)
+        rb = fab.request_bytes
+
+        # Trace only the first collective of the session, representative
+        # target, same rule as the engine session.
+        collect = cfg.collect_trace and not self.records
+        step_nflows: List[int] = []
+        if collect:
+            self._bounds = [0]
+            for specs in step_specs:
+                flows = flows_for_dst(specs, cfg, dsts[0], 0.0)
+                step_nflows.append(len(flows))
+                for f in flows:
+                    self._bounds.append(
+                        self._bounds[-1] + max(1, math.ceil(f.nbytes / rb)))
+            self._trace = np.zeros(self._bounds[-1])
+
+        before = self._counters_total()
+        t0 = self.t
+        t = t0
         fi_base = 0
         for si, specs in enumerate(step_specs):
             comp = t
             for d in dsts:
                 flows = flows_for_dst(specs, cfg, d, t_start=t)
+                if base_offset:
+                    for f in flows:
+                        f.base_addr += base_offset
                 if not flows:
                     continue
                 trace_this = collect and d == dsts[0]
-                comp = max(comp, targets[d].run_step(
-                    flows,
-                    trace if trace_this else None,
-                    bounds, fi_base))
+                comp = max(comp, self._target(d).run_step(
+                    flows, si == 0,
+                    self._trace if trace_this else None,
+                    self._bounds, fi_base))
             t = comp
-            fi_base += step_nflows[si]
-        results.append(IterationResult(completion_ns=t - t_iter))
+            if collect:
+                fi_base += step_nflows[si]
+        self.t = t
 
-    ctr = targets[dsts[0]].state.counters
-    for d in dsts[1:]:
-        ctr.merge(targets[d].state.counters)
-    stall_sum = sum(tg.stall_sum for tg in targets.values())
+        rec = CollectiveResult(
+            label=label or name, collective=name, nbytes=nbytes,
+            n_gpus=fab_n.n_gpus, t_start=t0, t_end=t,
+            counters=self._counters_total().delta(before))
+        self.records.append(rec)
+        return rec
 
-    return RunResult(iterations=results, counters=ctr, config=cfg,
-                     collective_bytes=nbytes, trace=trace,
-                     trace_flow_bounds=bounds,
-                     mean_stall_ns=stall_sum / max(1, ctr.requests))
+    def result(self, collective_bytes: Optional[int] = None) -> RunResult:
+        ctr = self._counters_total()
+        stall_sum = sum(tg.stall_sum for tg in self._targets.values())
+        nbytes = (collective_bytes if collective_bytes is not None
+                  else (self.records[0].nbytes if self.records else 0))
+        return RunResult(
+            iterations=[IterationResult(completion_ns=r.completion_ns)
+                        for r in self.records],
+            counters=ctr, config=self.cfg, collective_bytes=nbytes,
+            trace=self._trace, trace_flow_bounds=self._bounds,
+            mean_stall_ns=stall_sum / max(1, ctr.requests))
+
+
+def simulate_ref(nbytes: int, cfg: SimConfig) -> RunResult:
+    """Oracle simulation of ``cfg.collective`` (same flow sets as the engine)."""
+    sess = RefSession(cfg)
+    for _ in range(cfg.iterations):
+        sess.run(nbytes)
+    return sess.result(collective_bytes=nbytes)

@@ -1,0 +1,216 @@
+"""Persistent-TLB simulation sessions (workload replay, DESIGN.md §8).
+
+The paper's headline result — cold Link-TLB misses cost up to 1.4x on small
+collectives while warmed caches erase the overhead — is a statement about
+*sequences* of collectives: an inference decode loop fires one small MoE
+all-to-all per layer per token, and only the very first invocations pay the
+cold-walk tax.  :class:`SimSession` holds one :class:`~repro.core.engine.
+EpochEngine` per simulated target GPU (and hence one
+:class:`~repro.core.tlb.TranslationState`) across successive collective
+invocations, so TLB/PWC warmth carries from call to call exactly as it would
+on hardware.  :func:`repro.core.engine.simulate` is a thin wrapper: one
+session, ``cfg.iterations`` back-to-back runs.
+
+Sessions support:
+
+* heterogeneous call sequences — each :meth:`run` may override the
+  collective pattern, the participating GPU count (a TP subgroup inside the
+  pod) and the buffer region (``base_offset``), so model-derived workloads
+  (:mod:`repro.workloads`) replay straight through;
+* inter-collective idle gaps (:meth:`idle`) that advance the clock; when
+  ``SimConfig.tlb_retention_ns`` is set, a gap at least that long flushes
+  all cached translations, modelling eviction by competing traffic while
+  the pod is quiet;
+* per-collective statistics — every :meth:`run` returns a
+  :class:`CollectiveResult` carrying its own completion time and counter
+  deltas, which is what per-token degradation trajectories are made of.
+
+The request-level oracle mirror is :class:`repro.core.ref_des.RefSession`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .config import SimConfig
+from .engine import (EpochEngine, Flow, IterationResult, RunResult,
+                     flows_for_dst)
+from .patterns import get_pattern, simulated_dsts
+from .tlb import Counters
+
+
+def resolve_collective(cfg: SimConfig, nbytes: int,
+                       collective: Optional[str], n_gpus: Optional[int]):
+    """(name, fab_n, step_specs, dsts) for one session run.
+
+    Single source of truth for per-call pattern/group resolution and
+    validation, shared by :class:`SimSession` and
+    :class:`~repro.core.ref_des.RefSession` so the two sides of the
+    oracle-equivalence contract cannot drift.
+    """
+    fab = cfg.fabric
+    name = collective if collective is not None else cfg.collective
+    fab_n = (fab if n_gpus is None or n_gpus == fab.n_gpus
+             else dataclasses.replace(fab, n_gpus=n_gpus))
+    if fab_n.n_gpus > fab.n_gpus:
+        raise ValueError(
+            f"collective group of {fab_n.n_gpus} exceeds pod size "
+            f"{fab.n_gpus}")
+    pattern = get_pattern(name)
+    step_specs = pattern.steps(nbytes, fab_n)
+    dsts = simulated_dsts(pattern, step_specs, cfg.symmetric, fab_n)
+    return name, fab_n, step_specs, dsts
+
+
+@dataclass
+class CollectiveResult:
+    """One collective invocation inside a session."""
+
+    label: str
+    collective: str
+    nbytes: int
+    n_gpus: int
+    t_start: float        # absolute session time the collective was issued
+    t_end: float          # absolute completion time
+    counters: Counters    # counter deltas attributable to this invocation
+
+    @property
+    def completion_ns(self) -> float:
+        return self.t_end - self.t_start
+
+
+class SimSession:
+    """Warm-state replay of a sequence of collectives on one pod."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.t = 0.0
+        self.records: List[CollectiveResult] = []
+        self._engines: Dict[int, EpochEngine] = {}
+        # Tracing state (first run() only, mirroring simulate's iteration 0).
+        self._trace_dst: Optional[int] = None
+        self._flow_sizes: List[int] = []
+
+    # -- clock ---------------------------------------------------------------
+    def idle(self, gap_ns: float) -> None:
+        """Advance the session clock by an inter-collective compute/idle gap.
+
+        With ``cfg.tlb_retention_ns`` set, gaps of at least that length
+        flush all cached translations (competing traffic evicts the Link-TLB
+        working set); shorter gaps leave warmth intact — the hierarchy has
+        no self-decay.
+        """
+        if gap_ns <= 0:
+            return
+        self.t += gap_ns
+        retention = self.cfg.tlb_retention_ns
+        if retention is not None and gap_ns >= retention:
+            for eng in self._engines.values():
+                eng.state.flush()
+
+    # -- engines -------------------------------------------------------------
+    def _engine(self, dst: int) -> EpochEngine:
+        eng = self._engines.get(dst)
+        if eng is None:
+            eng = self._engines[dst] = EpochEngine(self.cfg, dst=dst)
+        return eng
+
+    def _counters_total(self) -> Counters:
+        total = Counters()
+        for eng in self._engines.values():
+            total.merge(eng.state.counters)
+        return total
+
+    # -- core ----------------------------------------------------------------
+    def run(self, nbytes: int, *, collective: Optional[str] = None,
+            n_gpus: Optional[int] = None, gap_ns: float = 0.0,
+            base_offset: int = 0, label: str = "") -> CollectiveResult:
+        """Replay one collective starting at the current session time.
+
+        ``collective``/``n_gpus`` override the session defaults per call
+        (e.g. a TP all-gather over an 8-GPU subgroup inside a 64-GPU pod);
+        ``base_offset`` shifts the collective's buffer region inside each
+        target's NPA space so distinct logical buffers touch distinct pages;
+        ``gap_ns`` is a compute/idle window inserted *before* the collective
+        (see :meth:`idle`).
+        """
+        cfg = self.cfg
+        fab = cfg.fabric
+        if gap_ns:
+            self.idle(gap_ns)
+        name, fab_n, step_specs, dsts = resolve_collective(
+            cfg, nbytes, collective, n_gpus)
+
+        # Trace only the first collective of the session (simulate's
+        # iteration-0 semantics), on the representative target.
+        collect = cfg.collect_trace and not self.records
+        if collect:
+            self._trace_dst = dsts[0]
+
+        before = self._counters_total()
+        rb = fab.request_bytes
+        t0 = self.t
+        t = t0
+        for si, specs in enumerate(step_specs):
+            comp = t
+            for d in dsts:
+                eng = self._engine(d)
+                flows = flows_for_dst(specs, cfg, d, t_start=t)
+                if base_offset:
+                    for f in flows:
+                        f.base_addr += base_offset
+                if not flows:
+                    continue
+                trace_this = collect and d == self._trace_dst
+                fi_base = len(self._flow_sizes)
+                if trace_this:
+                    self._flow_sizes.extend(
+                        max(1, math.ceil(f.nbytes / rb)) for f in flows)
+                comp = max(comp, eng.run_iteration(
+                    flows, trace_this, fi_base=fi_base, first_step=si == 0))
+            t = comp
+        self.t = t
+
+        rec = CollectiveResult(
+            label=label or name, collective=name, nbytes=nbytes,
+            n_gpus=fab_n.n_gpus, t_start=t0, t_end=t,
+            counters=self._counters_total().delta(before))
+        self.records.append(rec)
+        return rec
+
+    # -- aggregation ---------------------------------------------------------
+    def result(self, collective_bytes: Optional[int] = None) -> RunResult:
+        """Aggregate the session so far as a :class:`RunResult`.
+
+        Non-destructive: the session can keep running afterwards.  One
+        :class:`IterationResult` per collective invocation, counters merged
+        over every simulated target, trace (if collected) for the first
+        invocation's representative target.
+        """
+        cfg = self.cfg
+        ctr = self._counters_total()
+
+        trace = None
+        bounds = None
+        if cfg.collect_trace:
+            bounds = [0]
+            for sz in self._flow_sizes:
+                bounds.append(bounds[-1] + sz)
+            trace = np.zeros(bounds[-1])
+            if self._trace_dst is not None:
+                for (fi, i0, arr) in self._engines[self._trace_dst].trace_chunks:
+                    trace[bounds[fi] + i0: bounds[fi] + i0 + len(arr)] = arr
+
+        stall_total = sum(e.stall_sum for e in self._engines.values())
+        nbytes = (collective_bytes if collective_bytes is not None
+                  else (self.records[0].nbytes if self.records else 0))
+        return RunResult(
+            iterations=[IterationResult(completion_ns=r.completion_ns)
+                        for r in self.records],
+            counters=ctr, config=cfg, collective_bytes=nbytes,
+            trace=trace, trace_flow_bounds=bounds,
+            mean_stall_ns=stall_total / (ctr.requests or 1))

@@ -120,6 +120,34 @@ class Counters:
         self.probes += other.probes
         self.mshr_stall_ns += other.mshr_stall_ns
 
+    def copy(self) -> "Counters":
+        c = Counters(
+            requests=self.requests, by_class=dict(self.by_class),
+            rat_ns_sum=self.rat_ns_sum, rat_ns_max=self.rat_ns_max,
+            walks=self.walks, walk_mem_reads=self.walk_mem_reads,
+            pwc_hits=self.pwc_hits, pwc_misses=self.pwc_misses,
+            probes=self.probes, mshr_stall_ns=self.mshr_stall_ns)
+        return c
+
+    def delta(self, since: "Counters") -> "Counters":
+        """Counters accumulated after the ``since`` snapshot was taken.
+
+        ``rat_ns_max`` is cumulative, not differentiable: the returned value
+        is the running max (exact when the max occurred after the snapshot).
+        """
+        return Counters(
+            requests=self.requests - since.requests,
+            by_class={k: self.by_class[k] - since.by_class[k]
+                      for k in self.by_class},
+            rat_ns_sum=self.rat_ns_sum - since.rat_ns_sum,
+            rat_ns_max=self.rat_ns_max,
+            walks=self.walks - since.walks,
+            walk_mem_reads=self.walk_mem_reads - since.walk_mem_reads,
+            pwc_hits=self.pwc_hits - since.pwc_hits,
+            pwc_misses=self.pwc_misses - since.pwc_misses,
+            probes=self.probes - since.probes,
+            mshr_stall_ns=self.mshr_stall_ns - since.mshr_stall_ns)
+
     @property
     def mean_rat_ns(self) -> float:
         return self.rat_ns_sum / self.requests if self.requests else 0.0
@@ -164,6 +192,22 @@ class TranslationState:
         # (station, page) -> L1 fill time for in-flight entries (MSHR).
         self.l1_pending: Dict[Tuple[int, int], float] = {}
         self.counters = Counters()
+
+    def flush(self) -> None:
+        """Invalidate all cached translations (TLBs, PWCs, pending walks).
+
+        Models long inter-collective idle gaps in a replay session: competing
+        traffic (local CUDA graphs, other tenants' collectives) evicts the
+        Link-TLB working set while the pod is quiet.  Counters and walker-pool
+        occupancy are preserved — only cached state is lost.
+        """
+        cfg = self.cfg
+        self.l1 = [LRUCache(cfg.l1.entries, cfg.l1.assoc)
+                   for _ in range(self.n_stations)]
+        self.l2 = LRUCache(cfg.l2.entries, cfg.l2.assoc)
+        self.pwc = [LRUCache(e, cfg.pwc.assoc) for e in cfg.pwc.entries]
+        self.l2_pending.clear()
+        self.l1_pending.clear()
 
     # -- page walk ---------------------------------------------------------
     def _walk_latency(self, page: int, t: float) -> float:

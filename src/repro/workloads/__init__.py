@@ -1,0 +1,13 @@
+# Workload replay: model-derived collective sequences (decode/prefill/train
+# steps of the real architecture configs) replayed through persistent-TLB
+# simulation sessions.  `python -m repro.workloads --arch ... --shape ...`
+# prints the per-step warm-vs-cold degradation trajectory.
+from .derive import (CollectiveCall, PodSpec, WorkloadTrace, derive_workload,
+                     layer_param_bytes, moe_a2a_bytes, resolve_pod)
+from .replay import ReplayResult, StepStats, buffer_layout, replay
+
+__all__ = [
+    "CollectiveCall", "PodSpec", "WorkloadTrace", "derive_workload",
+    "layer_param_bytes", "moe_a2a_bytes", "resolve_pod",
+    "ReplayResult", "StepStats", "buffer_layout", "replay",
+]

@@ -1,0 +1,279 @@
+"""Derive per-step collective sequences from real model configs (DESIGN.md §8).
+
+The repo carries 12 real architecture configs (:mod:`repro.configs`) and a
+RAT simulator (:mod:`repro.core`) that, until now, only priced free-standing
+collectives.  This module connects them: given a model config, an input
+shape (``decode_32k`` / ``prefill_32k`` / ``train_4k``) and a pod
+description, it emits the ordered sequence of collectives one model step
+actually fires — sized from the model's own dimensions — ready to replay
+through a persistent-TLB session (:mod:`repro.workloads.replay`).
+
+Derivation formulas (first-order, documented in DESIGN.md §8):
+
+* **MoE expert-parallel dispatch/combine** (the paper's collective): the
+  ``lax.all_to_all`` of :func:`repro.models.moe.moe_block_ep` exchanges a
+  ``[ep, C, d_model]`` buffer where ``C = max(8, T_loc*top_k*cf/E) * E_loc``
+  — so ``bytes = ep * C * d_model * dtype_bytes``, twice per MoE layer.
+* **Tensor-parallel activation collectives**: sequence-parallel Megatron
+  form — one all-gather + one reduce-scatter of the full activation
+  (``T_step * d_model * dtype_bytes``) around each sharded sublayer.
+* **Data-parallel gradient sync** (train only): one ring all-reduce per
+  layer of that layer's TP-sharded parameter bytes, each layer a distinct
+  buffer (cold pages every step — unlike the reused activation buffers).
+* **Compute windows**: roofline gaps between collectives,
+  ``flops / (peak_tflops * mfu)``, with fwd ``2·P_active·T`` (×3 for train).
+
+Pure-Python sizing only — importing this module does not import jax; the
+registry lookup (``arch`` by name) lazily imports :mod:`repro.configs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, List, Optional
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..models.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class PodSpec:
+    """The scale-up pod a workload is mapped onto.
+
+    ``ep``/``tp``/``dp`` default per shape kind (see :func:`resolve_pod`):
+    inference uses the whole pod for TP and the largest compatible EP group;
+    train splits the pod into TP-of-8 x DP replicas.
+    """
+
+    n_gpus: int = 16
+    ep: Optional[int] = None       # expert-parallel group size
+    tp: Optional[int] = None       # tensor-parallel group size
+    dp: Optional[int] = None       # data-parallel replicas inside the pod
+    dtype_bytes: int = 2           # bf16 activations
+    grad_bytes: int = 2            # bf16 gradient all-reduce
+    peak_tflops: float = 990.0     # dense bf16 peak per GPU
+    mfu: float = 0.4               # achieved fraction of peak in compute
+    microbatch_tokens: int = 8192  # prefill/train tokens per microbatch
+    # Buffer granularity.  "per_layer": zero-copy semantics — collectives
+    # write directly into each layer's persistent tensors, so every layer
+    # owns distinct pages (UALink remote stores target the real destination
+    # buffer; this is the faithful default).  "pooled": all layers exchange
+    # through one reused communication arena per collective kind
+    # (NCCL-channel-style staging), collapsing the Link-TLB working set.
+    buffer_reuse: str = "per_layer"
+
+
+@dataclass(frozen=True)
+class CollectiveCall:
+    """One collective of the derived sequence."""
+
+    label: str          # e.g. "tok0/L3/moe_dispatch"
+    collective: str     # pattern registry name
+    nbytes: int         # per-GPU buffer size (pattern semantics)
+    group: int          # participating GPU count
+    compute_ns: float   # compute window preceding this collective
+    buffer: str         # logical buffer id (distinct ids -> distinct pages)
+    step: int           # model step (decode: token index)
+
+
+@dataclass
+class WorkloadTrace:
+    """A derived sequence of collectives plus its provenance."""
+
+    arch: str
+    shape: str
+    pod: PodSpec
+    calls: List[CollectiveCall] = field(default_factory=list)
+    tokens_per_step: int = 0
+    n_microbatches: int = 1     # prefill/train: microbatches per full pass
+
+    @property
+    def n_steps(self) -> int:
+        return (self.calls[-1].step + 1) if self.calls else 0
+
+    def step_calls(self, step: int) -> List[CollectiveCall]:
+        return [c for c in self.calls if c.step == step]
+
+    def total_bytes(self) -> int:
+        return sum(c.nbytes for c in self.calls)
+
+
+def _largest_common_group(pod_gpus: int, n_experts: int) -> int:
+    """Largest EP group that divides both the pod and the expert count."""
+    return math.gcd(pod_gpus, n_experts)
+
+
+def resolve_pod(pod: PodSpec, cfg: "ModelConfig", kind: str) -> PodSpec:
+    """Fill in default ep/tp/dp for a shape kind (see module docstring)."""
+    n = pod.n_gpus
+    ep = pod.ep
+    if ep is None:
+        ep = _largest_common_group(n, cfg.n_experts) if cfg.n_experts else 1
+    elif ep > 1:
+        # A user-supplied EP group must be realizable: moe_block_ep shards
+        # experts exactly (E_loc = E // ep) inside the pod.
+        if ep > n:
+            raise ValueError(f"ep({ep}) exceeds pod n_gpus({n})")
+        if cfg.n_experts % ep:
+            raise ValueError(
+                f"ep({ep}) does not divide n_experts({cfg.n_experts})")
+    tp = pod.tp
+    dp = pod.dp
+    if kind == "train":
+        if tp is None:
+            tp = 1
+            while tp < 8 and tp * 2 <= n and n % (tp * 2) == 0:
+                tp *= 2
+        if dp is None:
+            dp = n // tp
+    else:
+        if tp is None:
+            tp = n
+        if dp is None:
+            dp = 1
+    if tp * dp != n:
+        raise ValueError(f"tp({tp}) x dp({dp}) != pod n_gpus({n})")
+    return dataclasses.replace(pod, ep=ep, tp=tp, dp=dp)
+
+
+def _layer_is_moe(cfg: "ModelConfig", i: int) -> bool:
+    return cfg.n_experts > 0 and i % cfg.moe_every == cfg.moe_every - 1
+
+
+def _attn_params(cfg: "ModelConfig") -> int:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return d * h * dh * 2 + d * kv * dh * 2      # q,o + k,v projections
+
+
+def _ffn_params(cfg: "ModelConfig", i: int, active: bool) -> int:
+    if _layer_is_moe(cfg, i):
+        experts = cfg.top_k if active else cfg.n_experts
+        return (3 * cfg.d_model * cfg.d_ff_expert * experts
+                + cfg.d_model * cfg.n_experts)   # experts + router
+    return 3 * cfg.d_model * cfg.d_ff if cfg.d_ff > 0 else 0
+
+
+def layer_param_bytes(cfg: "ModelConfig", i: int, grad_bytes: int) -> int:
+    """Total parameter bytes of layer ``i`` (full experts, for grad sync)."""
+    return (_attn_params(cfg) + _ffn_params(cfg, i, active=False)) * grad_bytes
+
+
+def moe_a2a_bytes(cfg: "ModelConfig", tokens_local: int, ep: int,
+                  dtype_bytes: int) -> int:
+    """Per-GPU bytes of one EP dispatch/combine all-to-all.
+
+    Mirrors :func:`repro.models.moe.moe_block_ep`: the send buffer is
+    ``[ep, C, d_model]`` with ``C = _capacity(T_loc) * E_loc`` and
+    ``_capacity`` = ``max(8, T_loc * top_k * capacity_factor / E)``.
+    """
+    e_loc = cfg.n_experts // ep
+    cap = max(8, int(tokens_local * cfg.top_k * cfg.capacity_factor
+                     / cfg.n_experts))
+    return ep * cap * e_loc * cfg.d_model * dtype_bytes
+
+
+def _compute_ns(flops_per_gpu: float, pod: PodSpec) -> float:
+    return flops_per_gpu / (pod.peak_tflops * 1e3 * pod.mfu)
+
+
+def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
+                    n_gpus: Optional[int] = None,
+                    n_steps: int = 1) -> WorkloadTrace:
+    """Derive the collective sequence of ``n_steps`` model steps.
+
+    ``arch`` is a registry name (``"qwen3-moe-235b-a22b"``) or a
+    ``ModelConfig``; ``shape`` names a :data:`repro.configs.shapes.SHAPES`
+    entry.  One *step* is one decoded token position (``decode``) or one
+    microbatch forward/train pass (``prefill``/``train``); successive steps
+    repeat the same per-layer sequence on the same buffers, which is what a
+    persistent-TLB replay turns into a warm-vs-cold trajectory.
+    """
+    if isinstance(arch, str):
+        from ..configs import get_config            # lazy: imports jax
+        cfg = get_config(arch)
+    else:
+        cfg = arch
+    from ..configs.shapes import SHAPES             # pure-python
+    spec = SHAPES[shape]
+
+    pod = pod or PodSpec()
+    if n_gpus is not None:
+        pod = dataclasses.replace(pod, n_gpus=n_gpus)
+    pod = resolve_pod(pod, cfg, spec.kind)
+    ep, tp, dp = pod.ep, pod.tp, pod.dp
+
+    total_tokens = spec.global_batch * (1 if spec.kind == "decode"
+                                        else spec.seq_len)
+    if spec.kind == "decode":
+        t_step = spec.global_batch
+        n_micro = 1
+    else:
+        t_step = min(pod.microbatch_tokens, total_tokens)
+        n_micro = -(-total_tokens // t_step)
+    t_loc = max(1, t_step // ep)
+    flop_mult = 3.0 if spec.kind == "train" else 1.0    # fwd+bwd vs fwd
+
+    trace = WorkloadTrace(arch=cfg.name, shape=shape, pod=pod,
+                          tokens_per_step=t_step, n_microbatches=n_micro)
+    actv_bytes = t_step * cfg.d_model * pod.dtype_bytes
+    a2a = (moe_a2a_bytes(cfg, t_loc, ep, pod.dtype_bytes)
+           if cfg.n_experts and ep > 1 else 0)
+
+    per_layer = pod.buffer_reuse == "per_layer"
+    # Compute windows accumulate between emitted collectives: when a
+    # sublayer emits no traffic (e.g. tp == 1), its window still ages the
+    # session and is delivered as the next call's gap.
+    pending_ns = 0.0
+
+    def emit(label, collective, nbytes, group, compute_ns, buffer, step):
+        nonlocal pending_ns
+        trace.calls.append(CollectiveCall(
+            label, collective, nbytes, group,
+            compute_ns=compute_ns + pending_ns, buffer=buffer, step=step))
+        pending_ns = 0.0
+
+    for step in range(n_steps):
+        for i in range(cfg.n_layers):
+            tag = f"s{step}/L{i}"
+            suffix = f"_l{i}" if per_layer else ""
+            attn_ns = _compute_ns(
+                flop_mult * 2.0 * _attn_params(cfg) * t_step / tp, pod)
+            is_moe = _layer_is_moe(cfg, i)
+            ffn_ns = _compute_ns(
+                flop_mult * 2.0 * _ffn_params(cfg, i, active=True)
+                * t_step / (ep if is_moe and ep > 1 else tp), pod)
+            # Mixer sublayer (attention or SSM): sequence-parallel TP pair,
+            # ag -> mixer compute -> rs (the compute window sits between the
+            # pair, so it is the rs that finds aged TLBs under retention).
+            if tp > 1:
+                emit(f"{tag}/mixer_ag", "all_gather", actv_bytes, tp,
+                     0.0, "actv" + suffix, step)
+                emit(f"{tag}/mixer_rs", "reduce_scatter", actv_bytes, tp,
+                     attn_ns, "actv" + suffix, step)
+            else:
+                pending_ns += attn_ns
+            # FFN sublayer: EP all-to-all pair for MoE layers (dispatch ->
+            # expert compute -> combine); MoE without an EP group (ep == 1,
+            # all experts local) and dense FFNs shard over TP instead.
+            if is_moe and a2a > 0:
+                emit(f"{tag}/moe_dispatch", "all_to_all", a2a, ep,
+                     0.0, "moe_disp" + suffix, step)
+                emit(f"{tag}/moe_combine", "all_to_all", a2a, ep,
+                     ffn_ns, "moe_comb" + suffix, step)
+            elif tp > 1 and (cfg.d_ff > 0 or is_moe):
+                emit(f"{tag}/ffn_ag", "all_gather", actv_bytes, tp,
+                     0.0, "actv" + suffix, step)
+                emit(f"{tag}/ffn_rs", "reduce_scatter", actv_bytes, tp,
+                     ffn_ns, "actv" + suffix, step)
+            else:
+                pending_ns += ffn_ns
+        # Train: bucketed gradient sync, one ring all-reduce per layer over
+        # the DP group.  Distinct buffer per layer: gradient regions are as
+        # large as the weights and never share pages with activations.
+        if spec.kind == "train" and dp > 1:
+            for i in range(cfg.n_layers):
+                nb = max(1, layer_param_bytes(cfg, i, pod.grad_bytes) // tp)
+                emit(f"s{step}/L{i}/grad_ar", "ring_allreduce", nb, dp,
+                     0.0, f"grad_l{i}", step)
+    return trace

@@ -74,3 +74,56 @@ def test_property_ideal_completion_is_bandwidth_bound(n):
 def test_property_patterns_never_faster_than_ideal(coll, size_mb):
     c = ratsim.compare(size_mb * MB, 16, collective=coll)
     assert c.degradation >= 1.0 - 1e-12
+
+
+# ------------------------------------------------------- session properties
+from repro.core import SimSession, simulate  # noqa: E402
+from repro.core.config import FabricConfig, PrefetchConfig  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(size_mb=st.sampled_from([1, 2, 4, 16]),
+       n=st.sampled_from([8, 16, 32]),
+       coll=st.sampled_from(["all_to_all", "ring_allreduce", "all_gather",
+                             "broadcast"]))
+def test_property_warm_rerun_never_slower(size_mb, n, coll):
+    """A second identical collective on a warm session is never slower."""
+    s = SimSession(paper_config(n).replace(collective=coll))
+    cold = s.run(size_mb * MB)
+    warm = s.run(size_mb * MB)
+    assert warm.completion_ns <= cold.completion_ns + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(size_mb=st.sampled_from([1, 4, 16]), k=st.sampled_from([1, 2, 3]),
+       n=st.sampled_from([8, 16]))
+def test_property_session_replay_equals_iterations(size_mb, k, n):
+    """k session runs == one simulate(iterations=k) for the default
+    all-to-all, bit for bit."""
+    sess = SimSession(paper_config(n))
+    for _ in range(k):
+        sess.run(size_mb * MB)
+    got = sess.result()
+    one = simulate(size_mb * MB, paper_config(n).replace(iterations=k))
+    assert ([i.completion_ns for i in got.iterations]
+            == [i.completion_ns for i in one.iterations])
+    assert got.counters.by_class == one.counters.by_class
+    assert got.counters.walks == one.counters.walks
+
+
+@settings(max_examples=10, deadline=None)
+@given(size_mb=st.sampled_from([16, 64]), depth=st.sampled_from([1, 2, 3]))
+def test_property_prefetch_depth_monotone_under_scarce_buffering(size_mb,
+                                                                 depth):
+    """Deeper next-page prefetch never slows a scarce-ingress collective:
+    disabled >= depth d >= depth d+1 (more pages warmed ahead of the
+    stream can only remove port stalls)."""
+    fab = FabricConfig(n_gpus=16, ingress_entries=64)
+    cfg = paper_config(16).replace(fabric=fab)
+    off = simulate(size_mb * MB, cfg).completion_ns
+    shallow = simulate(size_mb * MB, cfg.replace(
+        prefetch=PrefetchConfig(enabled=True, depth=depth))).completion_ns
+    deep = simulate(size_mb * MB, cfg.replace(
+        prefetch=PrefetchConfig(enabled=True, depth=depth + 1))).completion_ns
+    assert shallow <= off + 1e-9
+    assert deep <= shallow + 1e-9

@@ -1,0 +1,61 @@
+"""Golden regression locks for benchmarks/paper_figs.py row values.
+
+Captured from the pre-session (PR 1) engine at the seed configuration; the
+session refactor (and anything after it) must reproduce these bit-for-bit —
+``completion_ns`` values are exact float equality, ratios are pinned to
+1e-12.  If a change legitimately alters the physics, recapture deliberately.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import ratsim, paper_config, MB
+from repro.core.config import TLBConfig
+
+# (n_gpus, size) -> (baseline_ns, ideal_ns, mean_rat_ns, requests, walks)
+FIG45_GOLDEN = {
+    (8, 1 * MB): (3890.0, 2762.32, 1413.8399999999995, 3584, 1),
+    (16, 1 * MB): (3890.0, 2802.0, 1394.0, 3840, 1),
+    (64, 1 * MB): (3890.0, 2825.04, 1382.4799999999975, 4032, 1),
+    (16, 16 * MB): (13342.48, 12018.0, 76.39673828124994, 61440, 8),
+    (32, 16 * MB): (13642.64, 12343.119999999999, 71.62859248991907, 63488, 8),
+}
+
+
+@pytest.mark.parametrize("n,size", sorted(FIG45_GOLDEN))
+def test_fig4_fig5_rows_bit_for_bit(n, size):
+    base, ideal, mean_rat, reqs, walks = FIG45_GOLDEN[(n, size)]
+    c = ratsim.compare(size, n)
+    assert c.baseline.completion_ns == base
+    assert c.ideal.completion_ns == ideal
+    assert c.baseline.mean_rat_ns == pytest.approx(mean_rat, rel=1e-12)
+    assert c.baseline.counters.requests == reqs
+    assert c.baseline.counters.walks == walks
+
+
+# fig11: L2-TLB size sweep at 16 MB / 32 GPUs — flat beyond 32 entries.
+FIG11_GOLDEN = {32: 13642.64, 512: 13642.64, 32768: 13642.64}
+FIG11_DEG = 1.1052829430484352
+
+
+@pytest.mark.parametrize("entries", sorted(FIG11_GOLDEN))
+def test_fig11_rows_bit_for_bit(entries):
+    cfg = paper_config(32)
+    tr = dataclasses.replace(
+        cfg.translation,
+        l2=TLBConfig(entries=entries, assoc=2, hit_latency_ns=100.0,
+                     mshr_entries=512))
+    c = ratsim.compare(16 * MB, 32, cfg=cfg.replace(translation=tr))
+    assert c.baseline.completion_ns == FIG11_GOLDEN[entries]
+    assert c.degradation == pytest.approx(FIG11_DEG, rel=1e-12)
+
+
+def test_sweep_matches_compare_rows():
+    # The figure grid is produced through the (parallel) sweep executor;
+    # its values must equal the direct compare() calls above.
+    grid = ratsim.sweep([1 * MB, 16 * MB], [16])
+    for size in (1 * MB, 16 * MB):
+        c = ratsim.compare(size, 16)
+        g = grid[(16, size)]
+        assert g.baseline.completion_ns == c.baseline.completion_ns
+        assert g.ideal.completion_ns == c.ideal.completion_ns
