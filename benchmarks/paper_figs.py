@@ -241,6 +241,63 @@ def fig13_workload_replay() -> List[Row]:
     return rows
 
 
+def fig13_workload_replay_calibrated() -> List[Row]:
+    """Fig 13 (calibrated): the same decode replays with compute windows
+    *measured* on the repaired Pallas kernel tier instead of the roofline
+    guess (repro.workloads.calibrate), plus the paper-§6.1 question those
+    windows finally make answerable: how much of each token-0 cold-RAT
+    excess could a fused pre-translation pass hide inside the calibrated
+    compute window that precedes the collective — reported per phase
+    (per-layer windows) and per arch.
+    """
+    from repro.workloads import (calibrate, default_cache_path,
+                                 derive_workload, replay)
+
+    rows = []
+    for arch, n_tok in (("granite-moe-1b-a400m", 4),
+                        ("qwen3-moe-235b-a22b", 2)):
+        prof = calibrate(arch, "decode_32k", n_gpus=16,
+                         cache_path=default_cache_path(arch, "decode_32k",
+                                                       16))
+        trace = derive_workload(arch, "decode_32k", n_gpus=16,
+                                n_steps=n_tok, compute_profile=prof)
+        rep = replay(trace, compute_profile=prof)
+        for s in rep.steps:
+            rows.append((f"fig13cal/{arch}/token{s.step}", s.comm_ns / 1e3,
+                         f"degradation={s.degradation:.4f};walks={s.walks};"
+                         f"compute_us={s.compute_ns/1e3:.2f}"))
+        # Fused pre-translation headroom: a pre-translation pass issued with
+        # the producing compute hides at most min(window, cold excess) of
+        # each collective's RAT overhead.  Token 0 only — that is where the
+        # cold walks live.
+        ideal_ns = {(r.collective, r.nbytes, r.n_gpus): r.completion_ns
+                    for r in rep.ideal_calls}
+        by_phase: dict = {}
+        for c, rec in zip(trace.calls, rep.calls):
+            if c.step != 0:
+                continue
+            ex = rec.completion_ns - ideal_ns[(c.collective, c.nbytes,
+                                               c.group)]
+            if ex <= 0:
+                continue
+            key = c.phase or "untagged"
+            agg = by_phase.setdefault(key, [0.0, 0.0])
+            agg[0] += ex
+            agg[1] += min(c.compute_ns, ex)
+        tot_ex = sum(v[0] for v in by_phase.values())
+        tot_hide = sum(v[1] for v in by_phase.values())
+        for ph, (ex, hide) in sorted(by_phase.items()):
+            rows.append((f"fig13cal/{arch}/hide/{ph}", 0.0,
+                         f"cold_excess_us={ex/1e3:.2f};"
+                         f"hideable_us={hide/1e3:.2f};"
+                         f"frac={hide/ex:.3f}"))
+        rows.append((f"fig13cal/{arch}/pretrans_hiding", 0.0,
+                     f"cold_excess_us={tot_ex/1e3:.2f};"
+                     f"hideable_us={tot_hide/1e3:.2f};"
+                     f"frac={tot_hide/tot_ex if tot_ex else 0.0:.3f}"))
+    return rows
+
+
 def sched_costmodel() -> List[Row]:
     """Framework integration: cost model accuracy + warm-up chunk plans."""
     from repro.core.cost_model import CostModel
@@ -262,5 +319,5 @@ def sched_costmodel() -> List[Row]:
 
 ALL = [fig4_overhead, fig5_latency, fig6_breakdown, fig7_hier, fig8_hum,
        fig9_10_traces, fig11_l2_sweep, fig12_collective_sweep,
-       fig13_workload_replay, opt_pretranslation, opt_prefetch,
-       sched_costmodel]
+       fig13_workload_replay, fig13_workload_replay_calibrated,
+       opt_pretranslation, opt_prefetch, sched_costmodel]

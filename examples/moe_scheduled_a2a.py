@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
 from repro.configs import get_smoke_config
+from repro.kernels.compat import shard_map
 from repro.core.scheduler import TranslationAwareScheduler
 from repro.models import api
 from repro.models.moe import moe_block_ep, init_moe
@@ -57,7 +57,7 @@ def main():
         return shard_map(
             inner, mesh=mesh,
             in_specs=(P(), espec, espec, espec, P()),
-            out_specs=P(), check_rep=False,
+            out_specs=P(), check_vma=False,
         )(x, params["wi_gate"][None], params["wi_up"][None],
           params["wo"][None], params["router"])
 

@@ -84,10 +84,19 @@ class CollectiveResult:
 
 
 class SimSession:
-    """Warm-state replay of a sequence of collectives on one pod."""
+    """Warm-state replay of a sequence of collectives on one pod.
 
-    def __init__(self, cfg: SimConfig):
+    ``compute_profile`` (a :class:`repro.workloads.calibrate.ComputeProfile`
+    or anything with a ``window_ns(phase) -> float | None`` method) makes
+    the session resolve phase-tagged inter-collective gaps from measured
+    kernel timings instead of the caller-supplied roofline value; ``None``
+    (the default) leaves every ``gap_ns`` untouched — bit-for-bit the
+    pre-calibration behavior.
+    """
+
+    def __init__(self, cfg: SimConfig, *, compute_profile=None):
         self.cfg = cfg
+        self.compute_profile = compute_profile
         self.t = 0.0
         self.records: List[CollectiveResult] = []
         self._engines: Dict[int, EpochEngine] = {}
@@ -96,6 +105,33 @@ class SimSession:
         self._flow_sizes: List[int] = []
 
     # -- clock ---------------------------------------------------------------
+    def resolve_gap(self, gap_ns: float, phase: str = "",
+                    window_parts=()) -> float:
+        """The gap actually applied before a call.
+
+        With a compute profile attached, ``window_parts`` — the
+        ``(phase, ns)`` decomposition of the gap (see
+        ``CollectiveCall.window_parts``) — is re-resolved part by part, so
+        carried multi-sublayer windows calibrate exactly as they would have
+        at derive time; a bare ``phase`` resolves a single-window gap; a
+        part (or phase) the profile does not know keeps its given ns.
+        Without a profile the caller's ``gap_ns`` is returned untouched.
+        """
+        prof = self.compute_profile
+        if prof is None:
+            return gap_ns
+        if window_parts:
+            total = 0.0
+            for ph, ns in window_parts:
+                w = prof.window_ns(ph) if ph else None
+                total += w if w is not None else ns
+            return total
+        if phase:
+            w = prof.window_ns(phase)
+            if w is not None:
+                return w
+        return gap_ns
+
     def idle(self, gap_ns: float) -> None:
         """Advance the session clock by an inter-collective compute/idle gap.
 
@@ -128,7 +164,8 @@ class SimSession:
     # -- core ----------------------------------------------------------------
     def run(self, nbytes: int, *, collective: Optional[str] = None,
             n_gpus: Optional[int] = None, gap_ns: float = 0.0,
-            base_offset: int = 0, label: str = "") -> CollectiveResult:
+            base_offset: int = 0, label: str = "",
+            phase: str = "", window_parts=()) -> CollectiveResult:
         """Replay one collective starting at the current session time.
 
         ``collective``/``n_gpus`` override the session defaults per call
@@ -136,10 +173,12 @@ class SimSession:
         ``base_offset`` shifts the collective's buffer region inside each
         target's NPA space so distinct logical buffers touch distinct pages;
         ``gap_ns`` is a compute/idle window inserted *before* the collective
-        (see :meth:`idle`).
+        (see :meth:`idle`), re-resolved from the session's compute profile
+        when ``phase`` names a calibrated phase (:meth:`resolve_gap`).
         """
         cfg = self.cfg
         fab = cfg.fabric
+        gap_ns = self.resolve_gap(gap_ns, phase, window_parts)
         if gap_ns:
             self.idle(gap_ns)
         name, fab_n, step_specs, dsts = resolve_collective(

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel tier: the compute hot-spots of the model zoo, written
+# against the jax-version shim in `compat.py` (CompilerParams naming,
+# shard_map location, BlockSpec order) so the whole tier tracks one file
+# across jax upgrades.  `ops` holds the jit'd public wrappers (interpret
+# mode off-TPU); `ref` the pure-jnp oracles; `repro.workloads.calibrate`
+# times these kernels to produce measured compute windows for replay.
+from . import compat  # noqa: F401  (import-time version probes)
+from .ops import flash_attention, grouped_matmul, rmsnorm, ssd_scan
+
+__all__ = ["compat", "flash_attention", "grouped_matmul", "rmsnorm",
+           "ssd_scan"]

@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams, block_spec
 
 NEG_INF = -1e30
 
@@ -69,21 +70,21 @@ def ssd_chunk_kernel(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
         functools.partial(_ssd_chunk_kernel, q_len=Q),
         grid=(G,),
         in_specs=[
-            pl.BlockSpec((None, Q, P), lambda g: (g, 0, 0)),
-            pl.BlockSpec((None, 1, Q), lambda g: (g, 0, 0)),
-            pl.BlockSpec((None, 1, Q), lambda g: (g, 0, 0)),
-            pl.BlockSpec((None, Q, N), lambda g: (g, 0, 0)),
-            pl.BlockSpec((None, Q, N), lambda g: (g, 0, 0)),
+            block_spec((None, Q, P), lambda g: (g, 0, 0)),
+            block_spec((None, 1, Q), lambda g: (g, 0, 0)),
+            block_spec((None, 1, Q), lambda g: (g, 0, 0)),
+            block_spec((None, Q, N), lambda g: (g, 0, 0)),
+            block_spec((None, Q, N), lambda g: (g, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((None, Q, P), lambda g: (g, 0, 0)),
-            pl.BlockSpec((None, P, N), lambda g: (g, 0, 0)),
+            block_spec((None, Q, P), lambda g: (g, 0, 0)),
+            block_spec((None, P, N), lambda g: (g, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((G, Q, P), jnp.float32),
             jax.ShapeDtypeStruct((G, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, dt[:, None, :], a[:, None, :], B, C)

@@ -1,7 +1,11 @@
 # Workload replay: model-derived collective sequences (decode/prefill/train
 # steps of the real architecture configs) replayed through persistent-TLB
 # simulation sessions.  `python -m repro.workloads --arch ... --shape ...`
-# prints the per-step warm-vs-cold degradation trajectory.
+# prints the per-step warm-vs-cold degradation trajectory; `--calibrate`
+# swaps the roofline compute windows for windows measured on the Pallas
+# kernel tier (repro.workloads.calibrate).
+from .calibrate import (ComputeProfile, PhaseWindow, calibrate,
+                        default_cache_path)
 from .derive import (CollectiveCall, PodSpec, WorkloadTrace, derive_workload,
                      layer_param_bytes, moe_a2a_bytes, resolve_pod)
 from .replay import ReplayResult, StepStats, buffer_layout, replay
@@ -10,4 +14,5 @@ __all__ = [
     "CollectiveCall", "PodSpec", "WorkloadTrace", "derive_workload",
     "layer_param_bytes", "moe_a2a_bytes", "resolve_pod",
     "ReplayResult", "StepStats", "buffer_layout", "replay",
+    "ComputeProfile", "PhaseWindow", "calibrate", "default_cache_path",
 ]

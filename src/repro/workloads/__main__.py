@@ -6,6 +6,12 @@
 Prints the derived collective mix, then the per-step (per-token for decode)
 communication-degradation trajectory: step 0 pays the cold Link-TLB walks,
 later steps reuse the warmed entries.
+
+``--calibrate`` measures the Pallas kernel tier (interpret mode off-TPU)
+and replays with the resulting per-phase compute windows instead of the
+roofline, caching the profile JSON under ``calibration/``; ``--profile``
+loads a previously cached JSON instead of measuring (profile loading is
+jax-free, though resolving a registry ``--arch`` still imports jax).
 """
 from __future__ import annotations
 
@@ -13,6 +19,7 @@ import argparse
 from collections import Counter
 
 from ..core.config import paper_config
+from .calibrate import ComputeProfile, calibrate, default_cache_path
 from .derive import PodSpec, derive_workload
 from .replay import replay
 
@@ -32,10 +39,33 @@ def main(argv=None) -> int:
     p.add_argument("--retention-ns", type=float, default=None,
                    help="flush TLBs when an idle gap exceeds this (default: "
                         "entries survive gaps)")
+    p.add_argument("--calibrate", action="store_true",
+                   help="measure the kernel tier and replay with calibrated "
+                        "compute windows (cached under calibration/)")
+    p.add_argument("--profile", default=None, metavar="JSON",
+                   help="replay with a previously cached compute profile "
+                        "(loads JSON, measures nothing)")
+    p.add_argument("--force-calibrate", action="store_true",
+                   help="re-measure even when a cached profile exists")
     args = p.parse_args(argv)
 
+    profile = None
+    if args.calibrate:
+        cache = args.profile or default_cache_path(args.arch, args.shape,
+                                                   args.gpus)
+        profile = calibrate(args.arch, args.shape, n_gpus=args.gpus,
+                            cache_path=cache, force=args.force_calibrate)
+        print(f"# compute profile ({cache}):")
+        for name, w in sorted(profile.phases.items()):
+            print(f"#   {name:<11s} roofline {w.roofline_ns/1e3:8.2f} us -> "
+                  f"calibrated {w.calibrated_ns/1e3:8.2f} us "
+                  f"({'+'.join(w.kernels)})")
+    elif args.profile is not None:
+        profile = ComputeProfile.load(args.profile)
+
     trace = derive_workload(args.arch, args.shape, pod=PodSpec(),
-                            n_gpus=args.gpus, n_steps=args.steps)
+                            n_gpus=args.gpus, n_steps=args.steps,
+                            compute_profile=profile)
     cfg = paper_config(args.gpus)
     if args.retention_ns is not None:
         cfg = cfg.replace(tlb_retention_ns=args.retention_ns)

@@ -75,6 +75,17 @@ class CollectiveCall:
     compute_ns: float   # compute window preceding this collective
     buffer: str         # logical buffer id (distinct ids -> distinct pages)
     step: int           # model step (decode: token index)
+    # Provenance of the window: the calibration phase whose *entire*
+    # per-layer window precedes this call ("" when the gap is zero or an
+    # accumulation of carried sublayer windows).  Lets a ComputeProfile be
+    # re-applied at replay time without re-deriving the trace.
+    phase: str = ""
+    # Exact decomposition of ``compute_ns`` into (phase, ns) sublayer
+    # windows, carried windows included in accumulation order — so
+    # replay-time profile application (SimSession.resolve_gap) reproduces
+    # derive-time application bit-for-bit even when tp == 1 folds several
+    # sublayer windows into one gap.  Empty when the gap is zero.
+    window_parts: tuple = ()
 
 
 @dataclass
@@ -177,9 +188,39 @@ def _compute_ns(flops_per_gpu: float, pod: PodSpec) -> float:
     return flops_per_gpu / (pod.peak_tflops * 1e3 * pod.mfu)
 
 
+def step_shape(spec, pod: PodSpec):
+    """(t_step, n_microbatches, flop_mult) of one model step of ``spec``.
+
+    Single source of truth shared by :func:`derive_workload` and the
+    calibration harness (:mod:`repro.workloads.calibrate`), so measured
+    windows are anchored to exactly the rooflines derivation emits.
+    """
+    total_tokens = spec.global_batch * (1 if spec.kind == "decode"
+                                        else spec.seq_len)
+    if spec.kind == "decode":
+        t_step, n_micro = spec.global_batch, 1
+    else:
+        t_step = min(pod.microbatch_tokens, total_tokens)
+        n_micro = -(-total_tokens // t_step)
+    return t_step, n_micro, (3.0 if spec.kind == "train" else 1.0)
+
+
+def layer_roofline_ns(cfg: "ModelConfig", i: int, t_step: int,
+                      pod: PodSpec, flop_mult: float):
+    """Roofline (mixer_ns, ffn_ns) compute windows of layer ``i``."""
+    mixer_ns = _compute_ns(
+        flop_mult * 2.0 * _attn_params(cfg) * t_step / pod.tp, pod)
+    is_moe = _layer_is_moe(cfg, i)
+    ffn_ns = _compute_ns(
+        flop_mult * 2.0 * _ffn_params(cfg, i, active=True)
+        * t_step / (pod.ep if is_moe and pod.ep > 1 else pod.tp), pod)
+    return mixer_ns, ffn_ns
+
+
 def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
                     n_gpus: Optional[int] = None,
-                    n_steps: int = 1) -> WorkloadTrace:
+                    n_steps: int = 1,
+                    compute_profile=None) -> WorkloadTrace:
     """Derive the collective sequence of ``n_steps`` model steps.
 
     ``arch`` is a registry name (``"qwen3-moe-235b-a22b"``) or a
@@ -188,6 +229,11 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     microbatch forward/train pass (``prefill``/``train``); successive steps
     repeat the same per-layer sequence on the same buffers, which is what a
     persistent-TLB replay turns into a warm-vs-cold trajectory.
+
+    ``compute_profile`` (a :class:`repro.workloads.calibrate.ComputeProfile`
+    for this exact ``(arch, shape, pod)``) replaces the roofline compute
+    windows with the profile's measured-and-calibrated per-phase windows;
+    ``None`` (the default) keeps the roofline bit-for-bit.
     """
     if isinstance(arch, str):
         from ..configs import get_config            # lazy: imports jax
@@ -195,6 +241,7 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     else:
         cfg = arch
     from ..configs.shapes import SHAPES             # pure-python
+    from .calibrate import ffn_phase, mixer_phase   # pure-python helpers
     spec = SHAPES[shape]
 
     pod = pod or PodSpec()
@@ -203,16 +250,24 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     pod = resolve_pod(pod, cfg, spec.kind)
     ep, tp, dp = pod.ep, pod.tp, pod.dp
 
-    total_tokens = spec.global_batch * (1 if spec.kind == "decode"
-                                        else spec.seq_len)
-    if spec.kind == "decode":
-        t_step = spec.global_batch
-        n_micro = 1
-    else:
-        t_step = min(pod.microbatch_tokens, total_tokens)
-        n_micro = -(-total_tokens // t_step)
+    if compute_profile is not None and not compute_profile.matches(
+            cfg.name, shape, pod.n_gpus, ep, tp, dp):
+        raise ValueError(
+            f"compute profile ({compute_profile.arch}/{compute_profile.shape}"
+            f"/g{compute_profile.n_gpus} ep={compute_profile.ep} "
+            f"tp={compute_profile.tp} dp={compute_profile.dp}) does not "
+            f"match workload ({cfg.name}/{shape}/g{pod.n_gpus} ep={ep} "
+            f"tp={tp} dp={dp})")
+
+    def window(phase: str, roofline_ns: float) -> float:
+        if compute_profile is not None:
+            w = compute_profile.window_ns(phase)
+            if w is not None:
+                return w
+        return roofline_ns
+
+    t_step, n_micro, flop_mult = step_shape(spec, pod)
     t_loc = max(1, t_step // ep)
-    flop_mult = 3.0 if spec.kind == "train" else 1.0    # fwd+bwd vs fwd
 
     trace = WorkloadTrace(arch=cfg.name, shape=shape, pod=pod,
                           tokens_per_step=t_step, n_microbatches=n_micro)
@@ -223,26 +278,39 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     per_layer = pod.buffer_reuse == "per_layer"
     # Compute windows accumulate between emitted collectives: when a
     # sublayer emits no traffic (e.g. tp == 1), its window still ages the
-    # session and is delivered as the next call's gap.
+    # session and is delivered as the next call's gap.  ``pending_parts``
+    # records the (phase, ns) decomposition of the carried amount so the
+    # gap stays re-resolvable against a profile at replay time.
     pending_ns = 0.0
+    pending_parts: List[tuple] = []
 
-    def emit(label, collective, nbytes, group, compute_ns, buffer, step):
-        nonlocal pending_ns
+    def emit(label, collective, nbytes, group, compute_ns, buffer, step,
+             phase=""):
+        nonlocal pending_ns, pending_parts
+        parts = list(pending_parts)
+        if compute_ns or phase:
+            parts.append((phase, compute_ns))
+        # A carried window mixes sublayer provenances: drop the single-phase
+        # tag (window_parts keeps the exact decomposition).
+        if pending_ns:
+            phase = ""
         trace.calls.append(CollectiveCall(
             label, collective, nbytes, group,
-            compute_ns=compute_ns + pending_ns, buffer=buffer, step=step))
+            compute_ns=compute_ns + pending_ns, buffer=buffer, step=step,
+            phase=phase, window_parts=tuple(parts)))
         pending_ns = 0.0
+        pending_parts = []
 
     for step in range(n_steps):
         for i in range(cfg.n_layers):
             tag = f"s{step}/L{i}"
             suffix = f"_l{i}" if per_layer else ""
-            attn_ns = _compute_ns(
-                flop_mult * 2.0 * _attn_params(cfg) * t_step / tp, pod)
+            mp, fp = mixer_phase(cfg, i), ffn_phase(cfg, i)
+            roof_mixer, roof_ffn = layer_roofline_ns(cfg, i, t_step, pod,
+                                                     flop_mult)
+            attn_ns = window(mp, roof_mixer)
             is_moe = _layer_is_moe(cfg, i)
-            ffn_ns = _compute_ns(
-                flop_mult * 2.0 * _ffn_params(cfg, i, active=True)
-                * t_step / (ep if is_moe and ep > 1 else tp), pod)
+            ffn_ns = window(fp, roof_ffn)
             # Mixer sublayer (attention or SSM): sequence-parallel TP pair,
             # ag -> mixer compute -> rs (the compute window sits between the
             # pair, so it is the rs that finds aged TLBs under retention).
@@ -250,9 +318,10 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
                 emit(f"{tag}/mixer_ag", "all_gather", actv_bytes, tp,
                      0.0, "actv" + suffix, step)
                 emit(f"{tag}/mixer_rs", "reduce_scatter", actv_bytes, tp,
-                     attn_ns, "actv" + suffix, step)
+                     attn_ns, "actv" + suffix, step, phase=mp)
             else:
                 pending_ns += attn_ns
+                pending_parts.append((mp, attn_ns))
             # FFN sublayer: EP all-to-all pair for MoE layers (dispatch ->
             # expert compute -> combine); MoE without an EP group (ep == 1,
             # all experts local) and dense FFNs shard over TP instead.
@@ -260,14 +329,15 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
                 emit(f"{tag}/moe_dispatch", "all_to_all", a2a, ep,
                      0.0, "moe_disp" + suffix, step)
                 emit(f"{tag}/moe_combine", "all_to_all", a2a, ep,
-                     ffn_ns, "moe_comb" + suffix, step)
+                     ffn_ns, "moe_comb" + suffix, step, phase=fp)
             elif tp > 1 and (cfg.d_ff > 0 or is_moe):
                 emit(f"{tag}/ffn_ag", "all_gather", actv_bytes, tp,
                      0.0, "actv" + suffix, step)
                 emit(f"{tag}/ffn_rs", "reduce_scatter", actv_bytes, tp,
-                     ffn_ns, "actv" + suffix, step)
+                     ffn_ns, "actv" + suffix, step, phase=fp)
             else:
                 pending_ns += ffn_ns
+                pending_parts.append((fp, ffn_ns))
         # Train: bucketed gradient sync, one ring all-reduce per layer over
         # the DP group.  Distinct buffer per layer: gradient regions are as
         # large as the weights and never share pages with activations.

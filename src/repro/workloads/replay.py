@@ -85,16 +85,26 @@ def buffer_layout(trace: WorkloadTrace, page_bytes: int) -> Dict[str, int]:
 
 
 def replay(trace: WorkloadTrace, *, cfg: Optional[SimConfig] = None,
-           include_ideal: bool = True) -> ReplayResult:
-    """Replay ``trace`` through a warm session (and its ideal twin)."""
+           include_ideal: bool = True,
+           compute_profile=None) -> ReplayResult:
+    """Replay ``trace`` through a warm session (and its ideal twin).
+
+    ``compute_profile`` re-resolves every phase-tagged compute gap from the
+    profile's measured windows at replay time (both sessions age
+    identically, so degradation stays a pure communication ratio); ``None``
+    keeps the trace's derived gaps bit-for-bit.  A trace already derived
+    *with* the profile replays identically either way — re-application is
+    idempotent.
+    """
     cfg = cfg or paper_config(trace.pod.n_gpus)
     if cfg.fabric.n_gpus != trace.pod.n_gpus:
         raise ValueError(
             f"cfg pod size {cfg.fabric.n_gpus} != trace pod size "
             f"{trace.pod.n_gpus}")
     layout = buffer_layout(trace, cfg.translation.page_bytes)
-    sess = SimSession(cfg)
-    ideal = SimSession(cfg.ideal()) if include_ideal else None
+    sess = SimSession(cfg, compute_profile=compute_profile)
+    ideal = (SimSession(cfg.ideal(), compute_profile=compute_profile)
+             if include_ideal else None)
 
     steps: Dict[int, StepStats] = {}
     calls: List[CollectiveResult] = []
@@ -105,12 +115,14 @@ def replay(trace: WorkloadTrace, *, cfg: Optional[SimConfig] = None,
     for c in trace.calls:
         kw = dict(collective=c.collective, n_gpus=c.group,
                   gap_ns=c.compute_ns, base_offset=layout[c.buffer],
-                  label=c.label)
+                  label=c.label, phase=c.phase,
+                  window_parts=c.window_parts)
         rec = sess.run(c.nbytes, **kw)
         calls.append(rec)
         st = steps.setdefault(c.step, StepStats(step=c.step))
         st.comm_ns += rec.completion_ns
-        st.compute_ns += c.compute_ns
+        st.compute_ns += sess.resolve_gap(c.compute_ns, c.phase,
+                                          c.window_parts)
         st.walks += rec.counters.walks
         st.requests += rec.counters.requests
         if ideal is not None:

@@ -1,0 +1,320 @@
+"""Compute-window calibration (repro.workloads.calibrate) + the kernel tier
+smoke layer that tier-1 keeps even though the full Pallas suites run in the
+dedicated jax CI job.
+
+Covers: ComputeProfile JSON round-trips (offline, no jax), the
+roofline-anchored calibration invariants (total step compute preserved,
+windows positive), profile threading through derive/replay/SimSession
+(mismatch rejected, default path untouched), and the acceptance criterion —
+the calibrated fig13 path runs end-to-end for granite and qwen3-moe.
+"""
+import math
+
+import pytest
+
+from repro.core import paper_config
+from repro.core.session import SimSession
+from repro.workloads import PodSpec, derive_workload, replay
+from repro.workloads.calibrate import (ComputeProfile, PhaseWindow,
+                                       calibrate, default_cache_path,
+                                       ffn_phase, mixer_phase)
+
+
+class TinyMoE:
+    """Duck-typed ModelConfig stand-in (fields derive/calibrate read)."""
+    name = "tiny-moe"
+    n_layers = 4
+    d_model = 512
+    n_heads = 8
+    n_kv_heads = 4
+    d_head = 64
+    d_ff = 0
+    n_experts = 16
+    top_k = 2
+    d_ff_expert = 256
+    moe_every = 1
+    capacity_factor = 1.25
+
+
+class TinyHybrid(TinyMoE):
+    name = "tiny-hybrid"
+    layer_pattern = ("ssm", "attn")
+    n_experts = 0
+    top_k = 0
+    d_ff_expert = 0
+    d_ff = 2048
+    ssm_state = 16
+    ssm_expand = 2
+    ssm_head_dim = 16
+
+
+def _profile(**over):
+    base = dict(arch="tiny-moe", shape="decode_32k", n_gpus=8, ep=8, tp=8,
+                dp=1)
+    base.update(over)
+    prof = ComputeProfile(**base)
+    prof.phases["attn_mixer"] = PhaseWindow(
+        phase="attn_mixer", kernels=("rmsnorm", "flash_attention"),
+        roofline_ns=100.0, measured_wall_ns=1e6, measured_flops=1e6,
+        calibrated_ns=150.0)
+    prof.phases["moe_ffn"] = PhaseWindow(
+        phase="moe_ffn", kernels=("grouped_matmul",),
+        roofline_ns=300.0, measured_wall_ns=2e6, measured_flops=4e6,
+        calibrated_ns=250.0)
+    return prof
+
+
+# ------------------------------------------------------------ offline layer
+class TestProfileIO:
+    def test_json_round_trip(self):
+        prof = _profile()
+        back = ComputeProfile.from_json(prof.to_json())
+        assert back == prof
+        assert back.window_ns("attn_mixer") == 150.0
+        assert back.window_ns("nope") is None
+
+    def test_save_load(self, tmp_path):
+        p = _profile().save(tmp_path / "cal" / "p.json")
+        assert ComputeProfile.load(p) == _profile()
+
+    def test_version_mismatch_rejected(self):
+        from repro.workloads.calibrate import PROFILE_VERSION
+        bad = _profile().to_json().replace(
+            f'"version": {PROFILE_VERSION}', '"version": 99')
+        with pytest.raises(ValueError, match="version"):
+            ComputeProfile.from_json(bad)
+
+    def test_default_cache_path_is_keyed(self):
+        a = default_cache_path("a", "decode_32k", 16)
+        b = default_cache_path("a", "decode_32k", 64)
+        assert a != b and a.suffix == ".json"
+
+    def test_phase_naming(self):
+        assert mixer_phase(TinyMoE(), 0) == "attn_mixer"
+        assert ffn_phase(TinyMoE(), 0) == "moe_ffn"
+        assert mixer_phase(TinyHybrid(), 0) == "ssm_mixer"
+        assert mixer_phase(TinyHybrid(), 1) == "attn_mixer"
+        assert ffn_phase(TinyHybrid(), 0) == "dense_ffn"
+
+
+# ------------------------------------------------------- profile threading
+class TestProfileThreading:
+    def test_derive_uses_profile_windows(self):
+        prof = _profile()
+        base = derive_workload(TinyMoE(), "decode_32k", n_gpus=8)
+        cal = derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                              compute_profile=prof)
+        assert [c.label for c in cal.calls] == [c.label for c in base.calls]
+        rss = [c for c in cal.calls if c.label.endswith("mixer_rs")]
+        assert all(c.compute_ns == 150.0 for c in rss)
+        assert all(c.phase == "attn_mixer" for c in rss)
+        combines = [c for c in cal.calls if c.label.endswith("moe_combine")]
+        assert all(c.compute_ns == 250.0 for c in combines)
+        # traffic sizing is untouched — only the gaps move
+        assert [c.nbytes for c in cal.calls] == [c.nbytes for c in base.calls]
+
+    def test_derive_rejects_mismatched_profile(self):
+        with pytest.raises(ValueError, match="does not match"):
+            derive_workload(TinyMoE(), "decode_32k", n_gpus=16,
+                            compute_profile=_profile())  # profile is g8
+
+    def test_derive_rejects_mismatched_parallelism_split(self):
+        # Same pod size, different tp/dp split: rooflines scale with the
+        # split, so the profile must be refused, not silently applied.
+        with pytest.raises(ValueError, match="does not match"):
+            derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                            pod=PodSpec(tp=4, dp=2),
+                            compute_profile=_profile())  # profile is tp=8
+
+    def test_replay_time_application_matches_derive_time(self):
+        prof = _profile()
+        at_derive = replay(derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                           n_steps=2, compute_profile=prof))
+        at_replay = replay(derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                           n_steps=2),
+                           compute_profile=prof)
+        for a, b in zip(at_derive.steps, at_replay.steps):
+            assert a.comm_ns == b.comm_ns
+            assert a.compute_ns == b.compute_ns
+            assert a.walks == b.walks
+
+    def test_replay_time_matches_derive_time_with_carried_windows(self):
+        # tp == 1 folds the mixer window into the next call's gap
+        # (pending_ns); window_parts must let replay-time application
+        # calibrate the carried component exactly like derive-time did.
+        prof = _profile(tp=1, dp=8)
+        pod = PodSpec(tp=1, dp=8)
+        at_derive = replay(derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                           n_steps=2, pod=pod,
+                                           compute_profile=prof))
+        at_replay = replay(derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                           n_steps=2, pod=pod),
+                           compute_profile=prof)
+        assert at_derive.steps[0].compute_ns > 0
+        for a, b in zip(at_derive.steps, at_replay.steps):
+            assert a.comm_ns == b.comm_ns
+            assert a.compute_ns == b.compute_ns
+            assert a.walks == b.walks
+
+    def test_window_parts_decompose_gaps_exactly(self):
+        tr = derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                             pod=PodSpec(tp=1, dp=8))
+        for c in tr.calls:
+            if c.window_parts:
+                assert sum(ns for _, ns in c.window_parts) \
+                    == pytest.approx(c.compute_ns, rel=1e-12)
+            else:
+                assert c.compute_ns == 0.0
+
+    def test_session_resolve_gap(self):
+        sess = SimSession(paper_config(8), compute_profile=_profile())
+        assert sess.resolve_gap(7.0, "attn_mixer") == 150.0
+        assert sess.resolve_gap(7.0, "unknown_phase") == 7.0
+        assert sess.resolve_gap(7.0) == 7.0
+        bare = SimSession(paper_config(8))
+        assert bare.compute_profile is None
+        assert bare.resolve_gap(7.0, "attn_mixer") == 7.0
+
+
+# ------------------------------------------------------- measurement layer
+class TestCalibrate:
+    @pytest.fixture(scope="class")
+    def tiny_profile(self):
+        pytest.importorskip("jax")
+        return calibrate(TinyMoE(), "decode_32k", n_gpus=8, reps=1)
+
+    def test_phases_and_anchor(self, tiny_profile):
+        prof = tiny_profile
+        assert set(prof.phases) == {"attn_mixer", "moe_ffn"}
+        # roofline anchor: redistribution preserves the layer-weighted step
+        # total (every TinyMoE layer has both phases, so layers == 4 each)
+        assert all(w.layers == 4 for w in prof.phases.values())
+        total_roof = sum(w.layers * w.roofline_ns
+                         for w in prof.phases.values())
+        total_cal = sum(w.layers * w.calibrated_ns
+                        for w in prof.phases.values())
+        assert math.isclose(total_cal, total_roof, rel_tol=1e-9)
+        assert all(w.calibrated_ns > 0 for w in prof.phases.values())
+        assert all(w.measured_wall_ns > 0 for w in prof.phases.values())
+
+    def test_cache_round_trip(self, tiny_profile, tmp_path):
+        path = tmp_path / "tiny.json"
+        tiny_profile.save(path)
+        again = calibrate(TinyMoE(), "decode_32k", n_gpus=8, reps=1,
+                          cache_path=path)
+        # measurement skipped: the cached windows come back identically
+        assert again == tiny_profile
+
+    def test_stale_version_cache_remeasured_not_fatal(self, tiny_profile,
+                                                      tmp_path):
+        path = tmp_path / "tiny.json"
+        path.write_text(tiny_profile.to_json().replace(
+            f'"version": {tiny_profile.version}', '"version": 1'))
+        prof = calibrate(TinyMoE(), "decode_32k", n_gpus=8, reps=1,
+                         cache_path=path)
+        # the stale cache was re-measured and overwritten in place
+        assert prof.version == tiny_profile.version
+        assert ComputeProfile.load(path).version == tiny_profile.version
+
+    def test_hybrid_phases_and_weighted_anchor(self):
+        # Unequal phase multiplicity (2 ssm + 2 attn mixers vs 4 dense
+        # ffns): the anchor must hold on the layer-weighted step total,
+        # not the per-phase sum.
+        pytest.importorskip("jax")
+        prof = calibrate(TinyHybrid(), "decode_32k", n_gpus=8, reps=1)
+        assert set(prof.phases) == {"ssm_mixer", "attn_mixer", "dense_ffn"}
+        assert prof.phases["ssm_mixer"].layers == 2
+        assert prof.phases["attn_mixer"].layers == 2
+        assert prof.phases["dense_ffn"].layers == 4
+        total_roof = sum(w.layers * w.roofline_ns
+                         for w in prof.phases.values())
+        total_cal = sum(w.layers * w.calibrated_ns
+                        for w in prof.phases.values())
+        assert math.isclose(total_cal, total_roof, rel_tol=1e-9)
+
+    def test_calibrated_replay_end_to_end(self, tiny_profile):
+        trace = derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                n_steps=2, compute_profile=tiny_profile)
+        rep = replay(trace, compute_profile=tiny_profile)
+        assert rep.cold_degradation > rep.steady_degradation
+        assert rep.steps[0].compute_ns > 0
+
+
+# --------------------------------------------- acceptance: real arch configs
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m",
+                                  "qwen3-moe-235b-a22b"])
+def test_fig13_calibrated_end_to_end(arch):
+    pytest.importorskip("jax")
+    prof = calibrate(arch, "decode_32k", n_gpus=16, reps=1)
+    trace = derive_workload(arch, "decode_32k", n_gpus=16, n_steps=2,
+                            compute_profile=prof)
+    rep = replay(trace, compute_profile=prof)
+    assert len(rep.steps) == 2
+    assert rep.steps[0].walks > 0
+    assert all(s.compute_ns > 0 for s in rep.steps)
+    assert all(s.degradation > 1.0 for s in rep.steps)
+
+
+# --------------------------------------------------- kernel tier smoke layer
+# Minimal interpret-mode runs of all four kernels vs their oracles: tier-1
+# proof the tier imports and computes on any jax this repo supports; the
+# full sweeps live in tests/test_kernels.py (the blocking jax CI job).
+class TestKernelSmoke:
+    def test_rmsnorm(self):
+        pytest.importorskip("jax")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels import ref
+        from repro.kernels.rmsnorm import rmsnorm_kernel
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
+        w = jnp.ones((64,))
+        np.testing.assert_allclose(
+            np.asarray(rmsnorm_kernel(x, w, interpret=True)),
+            np.asarray(ref.rmsnorm_ref(x, w)), rtol=1e-5, atol=1e-5)
+
+    def test_flash_attention(self):
+        pytest.importorskip("jax")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels import ref
+        from repro.kernels.flash_attention import flash_attention_kernel
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+        out = flash_attention_kernel(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.attention_ref(q, k, v,
+                                                          causal=True)),
+            rtol=2e-5, atol=2e-5)
+
+    def test_grouped_matmul(self):
+        pytest.importorskip("jax")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels import ref
+        from repro.kernels.grouped_matmul import grouped_matmul_kernel
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        lhs = jax.random.normal(ks[0], (128, 64), jnp.float32)
+        rhs = jax.random.normal(ks[1], (2, 64, 128), jnp.float32)
+        offs = jnp.asarray([0, 48, 128], jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(grouped_matmul_kernel(lhs, rhs, offs, interpret=True)),
+            np.asarray(ref.grouped_matmul_ref(lhs, rhs, offs)),
+            rtol=2e-5, atol=2e-5)
+
+    def test_ssd_chunk(self):
+        pytest.importorskip("jax")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.kernels import ref
+        from repro.kernels.ssd_scan import ssd_chunk_kernel
+        ks = jax.random.split(jax.random.PRNGKey(3), 5)
+        G, Q, P, N = 2, 16, 8, 8
+        x = jax.random.normal(ks[0], (G, Q, P), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (G, Q), jnp.float32))
+        a = -jnp.abs(jax.random.normal(ks[2], (G, Q), jnp.float32))
+        B = jax.random.normal(ks[3], (G, Q, N), jnp.float32)
+        C = jax.random.normal(ks[4], (G, Q, N), jnp.float32)
+        y_k, s_k = ssd_chunk_kernel(x, dt, a, B, C, interpret=True)
+        y_r, s_r = ref.ssd_chunk_ref(x, dt, a, B, C)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   rtol=1e-5, atol=1e-5)

@@ -59,3 +59,68 @@ def test_sweep_matches_compare_rows():
         g = grid[(16, size)]
         assert g.baseline.completion_ns == c.baseline.completion_ns
         assert g.ideal.completion_ns == c.ideal.completion_ns
+
+
+# --------------------------------------------------------------------------
+# Calibration-off replay goldens (PR 2 values): threading compute_profile
+# through derive/replay/SimSession must leave the default path bit-for-bit.
+# --------------------------------------------------------------------------
+
+# Pure-simulator lock (no jax): TinyMoE decode_32k on 8 GPUs, 3 steps ->
+# (step, comm_ns, ideal_comm_ns, walks, requests).
+TINY_REPLAY_GOLDEN = [
+    (0, 151804.15999999968, 141288.96000000002, 12, 7168),
+    (1, 144488.95999999967, 141288.96000000002, 0, 7168),
+    (2, 144488.9600000009, 141288.96000000002, 0, 7168),
+]
+
+
+def test_replay_calibration_off_bit_for_bit():
+    from repro.workloads import derive_workload, replay
+
+    class TinyMoE:
+        name = "tiny-moe"
+        n_layers = 4
+        d_model = 512
+        n_heads = 8
+        n_kv_heads = 4
+        d_head = 64
+        d_ff = 0
+        n_experts = 16
+        top_k = 2
+        d_ff_expert = 256
+        moe_every = 1
+        capacity_factor = 1.25
+
+    rep = replay(derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                 n_steps=3))
+    got = [(s.step, s.comm_ns, s.ideal_comm_ns, s.walks, s.requests)
+           for s in rep.steps]
+    assert got == TINY_REPLAY_GOLDEN
+
+
+# fig13 rows exactly as PR 2 emitted them (needs jax: real arch configs).
+FIG13_GOLDEN = [
+    ("fig13/granite-moe-1b-a400m/token0", 1769.4556799999705,
+     "degradation=1.0385;walks=72"),
+    ("fig13/granite-moe-1b-a400m/token1", 1744.4236800000135,
+     "degradation=1.0238;walks=0"),
+    ("fig13/granite-moe-1b-a400m/token2", 1744.4236800000476,
+     "degradation=1.0238;walks=0"),
+    ("fig13/granite-moe-1b-a400m/token3", 1744.423680000052,
+     "degradation=1.0238;walks=0"),
+    ("fig13/granite-moe-1b-a400m/check_cold_above_steady", 0.0,
+     "cold=1.0385;steady=1.0238;warms_up=True"),
+    ("fig13/qwen3-moe-235b-a22b/token0", 7828.577360000854,
+     "degradation=1.0265;walks=846"),
+    ("fig13/qwen3-moe-235b-a22b/token1", 7826.327200001521,
+     "degradation=1.0262;walks=796"),
+    ("fig13/qwen3-moe-235b-a22b/check_cold_above_steady", 0.0,
+     "cold=1.0265;steady=1.0262;warms_up=True"),
+]
+
+
+def test_fig13_rows_bit_for_bit():
+    jax = pytest.importorskip("jax")  # noqa: F841 - arch configs need jax
+    from benchmarks.paper_figs import fig13_workload_replay
+    assert fig13_workload_replay() == FIG13_GOLDEN

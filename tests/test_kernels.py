@@ -96,6 +96,24 @@ def test_grouped_matmul_empty_groups():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_grouped_matmul_uncovered_rows_zero_filled():
+    """Rows no expert group claims must come back zero, not garbage: the
+    accumulator is zero-initialized at e == 0 and written out unconditionally
+    at e == E-1, with every non-overlapping expert skipped by pl.when."""
+    lhs = jax.random.normal(KEY, (256, 64), jnp.float32)
+    rhs = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 64, 128), jnp.float32)
+    # all groups empty
+    out = np.asarray(grouped_matmul_kernel(
+        lhs, rhs, jnp.zeros((5,), jnp.int32), interpret=True))
+    assert (out == 0).all()
+    # offsets end short of T: the uncovered tail tiles stay zero
+    offs = jnp.asarray([0, 64, 64, 64, 64], jnp.int32)
+    out = np.asarray(grouped_matmul_kernel(lhs, rhs, offs, interpret=True))
+    np.testing.assert_allclose(out[:64], np.asarray(lhs[:64] @ rhs[0]),
+                               rtol=2e-5, atol=2e-5)
+    assert (out[64:] == 0).all()
+
+
 # ------------------------------------------------------------------ SSD scan
 SSD_SHAPES = [
     # (b, S, H, P, N, chunk)
