@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core import ratsim, paper_config, simulate, MB, GB
 from repro.core.config import (TLBConfig, PreTranslationConfig,
-                               PrefetchConfig, FabricConfig)
+                               PrefetchConfig, FabricConfig, SimConfig)
 
 SIZES = [1 * MB, 4 * MB, 16 * MB, 64 * MB, 256 * MB, 1 * GB, 4 * GB]
 GPUS = [8, 16, 32, 64]
@@ -180,6 +180,9 @@ def opt_prefetch() -> List[Row]:
     return rows
 
 
+# multipod_all_to_all is deliberately absent: on fig12's flat default
+# topology it coincides with hier_all_to_all (pod group == node group); its
+# figure lives in fig14, on an actual multi_pod fabric.
 COLLECTIVES = ("all_to_all", "ring_allreduce", "rd_allreduce", "all_gather",
                "reduce_scatter", "broadcast", "hier_all_to_all")
 
@@ -298,6 +301,72 @@ def fig13_workload_replay_calibrated() -> List[Row]:
     return rows
 
 
+GPUS14 = (16, 64, 256, 1024)
+TOPOS14 = ("single_clos", "two_tier", "multi_pod")
+
+
+def fig14_topology_scaling() -> List[Row]:
+    """Fig 14 (ours, beyond the paper): pod-scale RAT degradation, 16 -> 1024
+    GPUs, per topology, cold vs warm Link TLBs.
+
+    One sweep (fanned over the process pool) prices every (topology, pod
+    size, buffer size) point with ``iterations=2``: iteration 0 is the cold
+    collective, iteration 1 reruns it on the warmed TLBs — so each point
+    yields the cold and the warm degradation against the same zero-RAT
+    ideal.  Tier parameters: 16-GPU leaves under a 2x-oversubscribed spine
+    (``two_tier``) and 16-GPU Clos pods over a 4x-oversubscribed scale-out
+    hop (``multi_pod``); at 16 GPUs both degenerate to the single Clos, so
+    the three curves share their leftmost point by construction.
+    """
+    sizes = (1 * MB, 16 * MB)
+    base = SimConfig(fabric=FabricConfig(leaf_size=16, oversubscription=2.0,
+                                         pod_size=16),
+                     iterations=2)
+    grid = ratsim.sweep(sizes, GPUS14, topologies=TOPOS14, base_cfg=base)
+    rows = []
+    for topo in TOPOS14:
+        for n in GPUS14:
+            for s in sizes:
+                c = grid[(topo, n, s)]
+                b, i = c.baseline.iterations, c.ideal.iterations
+                cold = b[0].completion_ns / i[0].completion_ns
+                warm = b[1].completion_ns / i[1].completion_ns
+                rows.append((f"fig14/{topo}/gpus{n}/size{s//MB}MB",
+                             b[0].completion_ns / 1e3,
+                             f"cold_deg={cold:.4f};warm_deg={warm:.4f}"))
+    # Headline checks: the 16-GPU points coincide across topologies
+    # (degenerate tiers), and warm TLBs erase (almost all of) the cold tax
+    # at every scale and topology.
+    agree = all(
+        grid[(t, 16, s)].baseline.completion_ns
+        == grid[("single_clos", 16, s)].baseline.completion_ns
+        for t in TOPOS14 for s in sizes)
+    rows.append(("fig14/check_16gpu_topologies_degenerate", 0.0,
+                 f"agree={agree}"))
+    warm_ok = all(
+        (grid[(t, n, s)].baseline.iterations[1].completion_ns
+         <= grid[(t, n, s)].baseline.iterations[0].completion_ns + 1e-9)
+        for t in TOPOS14 for n in GPUS14 for s in sizes)
+    rows.append(("fig14/check_warm_never_worse_than_cold", 0.0,
+                 f"ok={warm_ok}"))
+    # Pattern choice on the scale-out hop: pod-staged multipod_all_to_all
+    # vs direct all-to-all on the same multi_pod fabric — staging trades
+    # 2x volume for (pods-1) oversubscribed crossings per GPU instead of
+    # (n - n/pods).
+    for n in (64, 256):
+        fab = FabricConfig(n_gpus=n, topology="multi_pod", pod_size=16)
+        direct = ratsim.compare(16 * MB, n, cfg=SimConfig(fabric=fab))
+        staged = ratsim.compare(
+            16 * MB, n,
+            cfg=SimConfig(fabric=fab, collective="multipod_all_to_all"))
+        rows.append((f"fig14/multipod_vs_direct/gpus{n}", 0.0,
+                     f"direct_us={direct.baseline.completion_ns/1e3:.2f};"
+                     f"staged_us={staged.baseline.completion_ns/1e3:.2f};"
+                     f"direct_deg={direct.degradation:.4f};"
+                     f"staged_deg={staged.degradation:.4f}"))
+    return rows
+
+
 def sched_costmodel() -> List[Row]:
     """Framework integration: cost model accuracy + warm-up chunk plans."""
     from repro.core.cost_model import CostModel
@@ -320,4 +389,5 @@ def sched_costmodel() -> List[Row]:
 ALL = [fig4_overhead, fig5_latency, fig6_breakdown, fig7_hier, fig8_hum,
        fig9_10_traces, fig11_l2_sweep, fig12_collective_sweep,
        fig13_workload_replay, fig13_workload_replay_calibrated,
-       opt_pretranslation, opt_prefetch, sched_costmodel]
+       fig14_topology_scaling, opt_pretranslation, opt_prefetch,
+       sched_costmodel]

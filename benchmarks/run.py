@@ -1,9 +1,14 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV.  ``--bench-engine`` instead times a fixed sweep grid through the
+# epoch engine and writes BENCH_engine.json (uploaded as a CI artifact so
+# the engine's performance trajectory is tracked PR over PR).
+import argparse
+import json
 import sys
 import time
 
 
-def main() -> None:
+def figures() -> int:
     from . import paper_figs
 
     print("name,us_per_call,derived")
@@ -20,8 +25,64 @@ def main() -> None:
             print(f"{name},{us:.3f},{derived}")
         print(f"#{fn.__name__} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
-    if failures:
-        sys.exit(1)
+    return 1 if failures else 0
+
+
+# Fixed micro-benchmark grid: (topology, n_gpus, nbytes).  Serial, one
+# simulate pair per point — wall times measure the engine itself, not the
+# sweep pool.  Includes the paper-scale 1 GB point and a two-tier 256-GPU
+# point so both the epoch expansion and the tier-shaping path are priced.
+def _bench_points():
+    from repro.core import GB, MB
+    return [
+        ("single_clos", 16, 16 * MB),
+        ("single_clos", 64, 1 * GB),
+        ("two_tier", 256, 16 * MB),
+        ("two_tier", 256, 256 * MB),
+        ("multi_pod", 64, 64 * MB),
+    ]
+
+
+def bench_engine(out_path: str) -> int:
+    from repro.core import ratsim
+    from repro.core.config import FabricConfig, SimConfig
+
+    points = []
+    t_all = time.perf_counter()
+    for topo, n, nbytes in _bench_points():
+        fab = FabricConfig(n_gpus=n, topology=topo, leaf_size=16,
+                           oversubscription=2.0, pod_size=16)
+        t0 = time.perf_counter()
+        c = ratsim.compare(nbytes, n, cfg=SimConfig(fabric=fab))
+        wall = time.perf_counter() - t0
+        points.append({
+            "topology": topo, "n_gpus": n, "nbytes": nbytes,
+            "wall_s": round(wall, 4),
+            "completion_ns": c.baseline.completion_ns,
+            "degradation": c.degradation,
+            "requests": c.baseline.counters.requests,
+        })
+        print(f"# {topo}/gpus{n}/{nbytes >> 20}MB: {wall:.3f}s "
+              f"(deg={c.degradation:.4f})", file=sys.stderr)
+    payload = {"grid": "engine-v1",
+               "total_wall_s": round(time.perf_counter() - t_all, 4),
+               "points": points}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path} (total {payload['total_wall_s']}s)",
+          file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    p.add_argument("--bench-engine", action="store_true",
+                   help="time the fixed engine grid and write a JSON "
+                        "artifact instead of printing the figure CSV")
+    p.add_argument("--out", default="BENCH_engine.json",
+                   help="output path for --bench-engine")
+    args = p.parse_args()
+    sys.exit(bench_engine(args.out) if args.bench_engine else figures())
 
 
 if __name__ == '__main__':

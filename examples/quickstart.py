@@ -16,7 +16,10 @@ from repro.core.config import PreTranslationConfig, FabricConfig, PrefetchConfig
 
 
 def main():
+    cfg0 = paper_config(16)
     print("=== Reverse Address Translation overhead vs zero-RAT ideal ===")
+    print(f"    (collective={cfg0.collective}, "
+          f"topology={cfg0.fabric.topology})")
     print(f"{'pod':>6} " + " ".join(f"{s//MB:>7}MB" for s in
                                     (1*MB, 4*MB, 16*MB, 64*MB, 256*MB, 1*GB)))
     for n in (8, 16, 32, 64):
@@ -24,6 +27,16 @@ def main():
                 for s in (1*MB, 4*MB, 16*MB, 64*MB, 256*MB, 1*GB)]
         print(f"{n:>4}gpu " + " ".join(f"{d:8.3f}" for d in degs))
     print("\npaper: up to 1.4x at 1MB, ~1.1x at 16MB, amortized for large\n")
+
+    print("=== beyond the paper: hierarchical pods (fig14) ===")
+    for topo in ("single_clos", "two_tier"):
+        cfg = paper_config(64).replace(fabric=FabricConfig(
+            n_gpus=64, topology=topo, leaf_size=16, oversubscription=2.0))
+        c = ratsim.compare(1 * MB, 64, cfg=cfg)
+        print(f"  64gpu 1MB on {topo:<12s}: degradation "
+              f"{c.degradation:.3f}x "
+              f"(completion {c.baseline.completion_ns/1e3:.2f} us)")
+    print()
 
     print("=== paper 6.1: fused pre-translation (warm TLBs during compute) ===")
     for s in (1*MB, 16*MB):

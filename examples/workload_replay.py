@@ -23,6 +23,8 @@ from repro.core import ratsim, paper_config, MB
 def main():
     print("=== SimSession: translation state persists across collectives ===")
     s = ratsim.session(16)
+    print(f"    (collective={s.cfg.collective}, "
+          f"topology={s.cfg.fabric.topology}, {s.cfg.fabric.n_gpus} GPUs)")
     cold = s.run(1 * MB)
     warm = s.run(1 * MB)
     moved = s.run(1 * MB, base_offset=64 * MB)     # fresh buffer: cold again
@@ -45,6 +47,8 @@ def main():
     print("=== granite-moe decode: per-token degradation trajectory ===")
     trace = derive_workload("granite-moe-1b-a400m", "decode_32k",
                             n_gpus=16, n_steps=4)
+    colls = ", ".join(sorted({c.collective for c in trace.calls}))
+    print(f"    (topology={trace.pod.topology}, collectives: {colls})")
     rep = replay(trace)
     for st in rep.steps:
         print(f"  token {st.step}: comm {st.comm_ns/1e3:8.2f} us, "
@@ -55,11 +59,29 @@ def main():
     print("=== qwen3-moe-235b: working set exceeds L2 Link-TLB reach ===")
     trace = derive_workload("qwen3-moe-235b-a22b", "decode_32k",
                             n_gpus=16, n_steps=2)
+    colls = ", ".join(sorted({c.collective for c in trace.calls}))
+    print(f"    (topology={trace.pod.topology}, collectives: {colls})")
     rep = replay(trace)
     for st in rep.steps:
         print(f"  token {st.step}: degradation {st.degradation:.4f}, "
               f"walks {st.walks}")
-    print("  steady-state walks stay high: capacity misses, not cold misses")
+    print("  steady-state walks stay high: capacity misses, not cold misses\n")
+
+    from repro.workloads import PodSpec
+
+    print("=== two-tier pod: TP stays intra-leaf, the EP a2a crosses the "
+          "spine ===")
+    trace = derive_workload(
+        "granite-moe-1b-a400m", "decode_32k",
+        pod=PodSpec(topology="two_tier", leaf_size=4, oversubscription=2.0),
+        n_gpus=16, n_steps=2)
+    pod = trace.pod
+    print(f"    (topology={pod.topology}, ep={pod.ep} tp={pod.tp} "
+          f"dp={pod.dp})")
+    rep = replay(trace)
+    for st in rep.steps:
+        print(f"  token {st.step}: degradation {st.degradation:.4f}, "
+              f"walks {st.walks}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from .patterns import (CollectivePattern, FlowSpec, PATTERNS, get_pattern,
 from .ratsim import run, compare, session, sweep, Comparison
 from .ref_des import RefSession, simulate_ref
 from .session import CollectiveResult, SimSession
+from .topology import Topology, TOPOLOGIES, get_topology
 
 __all__ = [
     "SimConfig", "FabricConfig", "TranslationConfig", "TLBConfig",
@@ -20,4 +21,5 @@ __all__ = [
     "sweep", "Comparison", "simulate_ref", "RefSession", "SimSession",
     "CollectiveResult", "CollectivePattern", "FlowSpec",
     "PATTERNS", "get_pattern", "analytic_volume",
+    "Topology", "TOPOLOGIES", "get_topology",
 ]

@@ -67,7 +67,15 @@ class TranslationConfig:
 
 @dataclass(frozen=True)
 class FabricConfig:
-    """UALink pod: single-level Clos, per-station bandwidth and latencies."""
+    """UALink pod: per-station bandwidth, latencies, and the pod topology.
+
+    The paper's fabric is a single-level Clos (``topology="single_clos"``,
+    the default — every pair sees :attr:`oneway_ns`).  The topology layer
+    (:mod:`repro.core.topology`) generalizes this to hierarchical pods:
+    ``"two_tier"`` (leaf/spine with an oversubscribed uplink) and
+    ``"multi_pod"`` (Clos pods joined over a scale-out hop), parameterized
+    by the tier fields below.
+    """
 
     n_gpus: int = 16
     gpus_per_node: int = 4
@@ -78,6 +86,16 @@ class FabricConfig:
     local_fabric_ns: float = 120.0     # CU -> NoC (paper: constant, all-miss)
     hbm_ns: float = 150.0              # HBM access at the target
     request_bytes: int = 256           # UALink flit-batched remote store
+    # -- topology (repro.core.topology) ------------------------------------
+    topology: str = "single_clos"      # registry name of the pod topology
+    leaf_size: int = 0                 # two_tier: GPUs per leaf switch
+                                       # (0 => gpus_per_node)
+    spine_latency_ns: float = 300.0    # two_tier: spine-switch crossing
+    oversubscription: float = 1.0      # two_tier: leaf->spine uplink
+                                       # oversubscription factor
+    pod_size: int = 0                  # multi_pod: GPUs per pod (0 => all)
+    interpod_latency_ns: float = 900.0      # multi_pod: scale-out hop
+    interpod_oversubscription: float = 4.0  # multi_pod: pod egress scarcity
     # Per-station ingress buffering at the target (requests resident from
     # arrival until their translation resolves).  When a pending walk holds
     # more than this many requests the station exerts credit backpressure
@@ -147,7 +165,7 @@ class SimConfig:
     # Collective traffic pattern, by registry name (repro.core.patterns):
     # "all_to_all" (the paper's workload, default), "ring_allreduce",
     # "rd_allreduce", "all_gather", "reduce_scatter", "broadcast",
-    # "hier_all_to_all".
+    # "hier_all_to_all", "multipod_all_to_all".
     collective: str = "all_to_all"
     iterations: int = 1          # back-to-back collective iterations
     # Session replay (repro.core.session): an inter-collective idle gap of at

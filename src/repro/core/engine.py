@@ -32,6 +32,7 @@ import numpy as np
 from .config import SimConfig
 from .patterns import FlowSpec
 from .tlb import TranslationState, Counters, L1_HIT, L1_HUM, INF
+from .topology import get_topology
 
 
 @dataclass
@@ -45,6 +46,8 @@ class Flow:
     t_start: float      # issue time of request 0 at the source CU
     delta_ns: float     # request inter-issue spacing (per-flow BW share)
     stripe: int         # station offset for round-robin striping
+    oneway_ns: float = 0.0  # source CU -> target station (topology path)
+    return_ns: float = 0.0  # target -> source ack (topology path)
 
 
 @dataclass
@@ -86,7 +89,13 @@ class RunResult:
         return self.counters.mean_rat_ns
 
     def breakdown(self) -> Dict[str, float]:
-        """Mean round-trip latency components per request (paper Fig. 6)."""
+        """Mean round-trip latency components per request (paper Fig. 6).
+
+        Fabric components are the tier-0 (intra-tier) path latencies; on
+        hierarchical topologies flows crossing upper tiers pay more (see
+        ``Flow.oneway_ns``/``return_ns``), which shows up in completion
+        time rather than in this per-request decomposition.
+        """
         fab = self.config.fabric
         return {
             "oneway_ns": fab.oneway_ns,
@@ -104,40 +113,66 @@ def flows_for_dst(specs: List[FlowSpec], cfg: SimConfig, dst: int,
     Per-flow bandwidth share: a source's concurrent outgoing flows of the
     step split its station pool evenly, so the inter-request spacing is
     ``request_bytes * out_degree / gpu_bw`` (the all-pairs ``n - 1`` case of
-    the seed engine generalized to arbitrary step out-degrees).
+    the seed engine generalized to arbitrary step out-degrees).  On
+    hierarchical topologies a flow crossing a capacity-limited tier is
+    additionally paced by its share of *that tier's* per-source capacity —
+    a source's flows crossing an oversubscribed uplink split the uplink,
+    not the flat station pool — and each flow carries the topology's
+    per-path request/ack latencies (DESIGN.md §10).
     """
     fab = cfg.fabric
+    topo = get_topology(fab)
+    flat = topo.flat
     out_deg: Dict[int, int] = {}
+    tier_deg: Dict[Tuple[int, int], int] = {}
     for s in specs:
         out_deg[s.src] = out_deg.get(s.src, 0) + 1
+        if not flat:
+            k = (s.src, topo.tier(s.src, s.dst))
+            tier_deg[k] = tier_deg.get(k, 0) + 1
     dst_base = (dst + 1) << 42  # distinct 4 TB NPA region per target GPU
+    oneway = fab.oneway_ns
+    ret = fab.return_ns
     flows = []
     for s in specs:
         if s.dst != dst or s.nbytes <= 0:
             continue
+        delta = fab.request_bytes * out_deg[s.src] / fab.gpu_bw
+        if not flat:
+            tier = topo.tier(s.src, dst)
+            cap = topo.tier_capacity(tier)
+            if cap is not None:
+                shaped = fab.request_bytes * tier_deg[(s.src, tier)] / cap
+                if shaped > delta:
+                    delta = shaped
+            oneway = topo.path_latency_ns(s.src, dst)
+            ret = topo.return_latency_ns(dst, s.src)
         flows.append(Flow(
             src=s.src, dst=dst,
             base_addr=dst_base + s.offset,
             nbytes=s.nbytes,
             t_start=t_start,
-            delta_ns=fab.request_bytes * out_deg[s.src] / fab.gpu_bw,
+            delta_ns=delta,
             stripe=s.src % fab.stations_per_gpu,
+            oneway_ns=oneway,
+            return_ns=ret,
         ))
     return flows
 
 
-def epoch_spans(flows: List[Flow], rb: int, oneway_ns: float,
-                page_bytes: int):
+def epoch_spans(flows: List[Flow], rb: int, page_bytes: int):
     """(first_arrival, flow_idx, page, i0, i1) spans, sorted by arrival.
 
     One span per (flow, page): requests ``i0..i1-1`` of flow ``flow_idx``
-    touch ``page``.  Shared by the epoch engine and the reference DES's
-    probe-schedule construction so both issue identical prefetch probes.
+    touch ``page``.  Arrivals use each flow's own topology path latency
+    (``Flow.oneway_ns``).  Shared by the epoch engine and the reference
+    DES's probe-schedule construction so both issue identical prefetch
+    probes.
     """
     eps = []
     for fi, f in enumerate(flows):
         n_req = max(1, math.ceil(f.nbytes / rb))
-        a0 = f.t_start + oneway_ns
+        a0 = f.t_start + f.oneway_ns
         first_page = f.base_addr // page_bytes
         last_page = (f.base_addr + f.nbytes - 1) // page_bytes
         for page in range(first_page, last_page + 1):
@@ -228,8 +263,7 @@ class EpochEngine:
     def _epochs(self, flows: List[Flow]):
         """Yield (first_arrival, flow_idx, page, i0, i1) sorted by time."""
         fab = self.cfg.fabric
-        return epoch_spans(flows, fab.request_bytes, fab.oneway_ns,
-                           self.page_bytes)
+        return epoch_spans(flows, fab.request_bytes, self.page_bytes)
 
     # -- core ----------------------------------------------------------------
     def run_iteration(self, flows: List[Flow], collect_trace: bool,
@@ -274,7 +308,7 @@ class EpochEngine:
         for (t_first, fi, page, i0, i1) in epochs:
             f = flows[fi]
             d = f.delta_ns
-            a0 = f.t_start + fab.oneway_ns
+            a0 = f.t_start + f.oneway_ns
 
             # Software prefetch (paper §6.2): as this page's stream begins,
             # request translation of the next page(s) of this flow's region.
@@ -351,7 +385,7 @@ class EpochEngine:
                                          fill if fill > -INF else 0.0) - arr
                         trace[i_s0 - i0 + ks * ns] = np.maximum(lat, l1_lat)
 
-                done = last_resolve + fab.hbm_ns + fab.return_ns
+                done = last_resolve + fab.hbm_ns + f.return_ns
                 if done > completion:
                     completion = done
 

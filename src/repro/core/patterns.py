@@ -37,6 +37,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Type
 
 from .config import FabricConfig
+from .topology import get_topology
 
 
 @dataclass(frozen=True)
@@ -198,14 +199,20 @@ class BinomialBroadcast(CollectivePattern):
 
 
 class HierarchicalAllToAll(CollectivePattern):
-    """Two-level AllToAll: intra-node gather, then inter-node exchange.
+    """Two-level AllToAll: intra-group gather, then inter-group exchange.
 
-    Phase 1: within each ``gpus_per_node`` group, GPU i hands local peer p
-    the chunks destined for p's rail (one ``nbytes // n`` chunk per node) —
+    The group is derived from the fabric topology
+    (:meth:`~repro.core.topology.Topology.local_group`): the historical
+    ``gpus_per_node`` node split on the flat default, the *leaf* on
+    ``two_tier`` — so the intra phase stays on the cheap tier and only the
+    aggregated exchange crosses the spine.
+
+    Phase 1: within each ``g``-GPU group, GPU i hands local peer p the
+    chunks destined for p's rail (one ``nbytes // n`` chunk per group) —
     (g-1) flows of ``nbytes // g`` per GPU into a staging region above the
-    final buffer.  Phase 2: each GPU exchanges aggregated node-chunks with
+    final buffer.  Phase 2: each GPU exchanges aggregated group-chunks with
     its (n/g - 1) rail counterparts — flows of ``g * nbytes // n`` landing
-    at the final buffer offset of the sender's node.  Fewer, larger flows
+    at the final buffer offset of the sender's group.  Fewer, larger flows
     per step than direct AllToAll: fewer cold pages per step at the cost of
     2x fabric volume (approximately; exactly (g-1)/g + (m-1)/m of nbytes
     per GPU vs (n-1)/n).
@@ -213,11 +220,14 @@ class HierarchicalAllToAll(CollectivePattern):
 
     name = "hier_all_to_all"
 
+    def _group(self, fab: FabricConfig) -> int:
+        return get_topology(fab).local_group()
+
     def steps(self, nbytes, fab):
-        n, g = fab.n_gpus, fab.gpus_per_node
+        n, g = fab.n_gpus, self._group(fab)
         if g <= 0 or n % g:
             raise ValueError(
-                f"hier_all_to_all needs n_gpus divisible by gpus_per_node "
+                f"{self.name} needs n_gpus divisible by the topology group "
                 f"(got {n} / {g})")
         m = n // g  # nodes
         chunk = nbytes // n
@@ -246,10 +256,30 @@ class HierarchicalAllToAll(CollectivePattern):
         return steps
 
 
+class MultiPodAllToAll(HierarchicalAllToAll):
+    """Pod-granular two-phase AllToAll for ``multi_pod`` topologies.
+
+    Same two-phase structure as :class:`HierarchicalAllToAll` but grouped
+    at the *pod* (:meth:`~repro.core.topology.Topology.pod_group`): phase 1
+    stages chunks with intra-pod rail peers on the cheap Clos tier, phase 2
+    exchanges pod-aggregated chunks with rail counterparts across the
+    scale-out hop — exactly (pods - 1) oversubscribed crossings per GPU
+    instead of the (n - n/pods) a direct AllToAll would pay.  On the flat
+    default topology the pod group degenerates to ``gpus_per_node`` and the
+    pattern coincides with ``hier_all_to_all``.
+    """
+
+    name = "multipod_all_to_all"
+
+    def _group(self, fab: FabricConfig) -> int:
+        return get_topology(fab).pod_group()
+
+
 PATTERNS: Dict[str, Type[CollectivePattern]] = {
     cls.name: cls for cls in (
         AllToAll, RingAllReduce, RecursiveDoublingAllReduce, RingAllGather,
-        RingReduceScatter, BinomialBroadcast, HierarchicalAllToAll)
+        RingReduceScatter, BinomialBroadcast, HierarchicalAllToAll,
+        MultiPodAllToAll)
 }
 
 
@@ -280,7 +310,7 @@ def analytic_volume(name: str, nbytes: int, fab: FabricConfig) -> int:
     Independent of :meth:`CollectivePattern.steps` so tests can check the
     emitted flow sets against it.
     """
-    n, g = fab.n_gpus, fab.gpus_per_node
+    n = fab.n_gpus
     chunk = nbytes // n
     if name == "all_to_all":
         return n * (n - 1) * chunk
@@ -292,7 +322,10 @@ def analytic_volume(name: str, nbytes: int, fab: FabricConfig) -> int:
         return (n - 1) * n * chunk
     if name == "broadcast":
         return (n - 1) * nbytes
-    if name == "hier_all_to_all":
+    if name in ("hier_all_to_all", "multipod_all_to_all"):
+        topo = get_topology(fab)
+        g = (topo.local_group() if name == "hier_all_to_all"
+             else topo.pod_group())
         m = n // g
         return n * ((g - 1) * m * chunk + (m - 1) * g * chunk)
     raise ValueError(f"no analytic volume for {name!r}")

@@ -56,30 +56,39 @@ class Comparison:
 
 
 def _resolve_cfg(n_gpus: int, collective: Optional[str],
-                 cfg: Optional[SimConfig], cfg_kw) -> SimConfig:
+                 cfg: Optional[SimConfig], cfg_kw,
+                 topology: Optional[str] = None) -> SimConfig:
     cfg = cfg or paper_config(n_gpus, **cfg_kw)
     if collective is not None:
         cfg = cfg.replace(collective=collective)
+    if topology is not None:
+        cfg = cfg.replace(
+            fabric=dataclasses.replace(cfg.fabric, topology=topology))
     return cfg
 
 
 def run(nbytes: int, n_gpus: int = 16, *, collective: Optional[str] = None,
+        topology: Optional[str] = None,
         cfg: Optional[SimConfig] = None, **cfg_kw) -> RunResult:
-    return simulate(nbytes, _resolve_cfg(n_gpus, collective, cfg, cfg_kw))
+    return simulate(nbytes, _resolve_cfg(n_gpus, collective, cfg, cfg_kw,
+                                         topology))
 
 
 def compare(nbytes: int, n_gpus: int = 16, *,
             collective: Optional[str] = None,
+            topology: Optional[str] = None,
             cfg: Optional[SimConfig] = None, **cfg_kw) -> Comparison:
-    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw)
+    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw, topology)
     return Comparison(baseline=simulate(nbytes, cfg),
                       ideal=simulate(nbytes, cfg.ideal()))
 
 
 def session(n_gpus: int = 16, *, collective: Optional[str] = None,
+            topology: Optional[str] = None,
             cfg: Optional[SimConfig] = None, **cfg_kw) -> SimSession:
     """A persistent-TLB session on a fresh pod (repro.core.session)."""
-    return SimSession(_resolve_cfg(n_gpus, collective, cfg, cfg_kw))
+    return SimSession(_resolve_cfg(n_gpus, collective, cfg, cfg_kw,
+                                   topology))
 
 
 # ---------------------------------------------------------------- sweeps
@@ -121,15 +130,20 @@ def _spawnable() -> bool:
 
 
 def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
+          topologies: Optional[Iterable[str]] = None,
           base_cfg: Optional[SimConfig] = None,
           workers: Optional[int] = None,
           cache: Optional[MutableMapping] = None,
           **cfg_kw) -> Dict[tuple, Comparison]:
-    """The paper's main sweep (Figs. 4 and 5), optionally per collective.
+    """The paper's main sweep (Figs. 4 and 5), per collective / topology.
 
     Without ``collectives`` the result keys are ``(n_gpus, size)`` as in the
     seed API; with a list of pattern names they grow a leading axis:
-    ``(collective, n_gpus, size)``.
+    ``(collective, n_gpus, size)``.  ``topologies`` (registry names from
+    :mod:`repro.core.topology`) adds a further leading axis the same way —
+    with both, keys are ``(topology, collective, n_gpus, size)``.  Tier
+    parameters (leaf size, oversubscription, pod size) come from
+    ``base_cfg``'s fabric when given, else the ``FabricConfig`` defaults.
 
     Points are independent, so large grids fan out over a
     ``concurrent.futures`` process pool — ``workers=None`` sizes the pool to
@@ -151,26 +165,37 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
     tasks: List[tuple] = []
     seen_inflight: Dict[tuple, tuple] = {}
     colls = list(collectives) if collectives is not None else [None]
-    for coll in colls:
-        for n in gpu_counts:
-            for s in sizes:
-                # Rescale only the GPU count; every other fabric field of
-                # base_cfg (gpus_per_node, stations, buffering...) is kept —
-                # pattern shape depends on them.
-                cfg = (base_cfg.replace(fabric=dataclasses.replace(
-                           base_cfg.fabric, n_gpus=n))
-                       if base_cfg is not None else paper_config(n, **cfg_kw))
-                if coll is not None:
-                    cfg = cfg.replace(collective=coll)
-                key = (n, s) if collectives is None else (coll, n, s)
-                ck = _cache_key(s, cfg)
-                if cache is not None and ck in cache:
-                    out[key] = cache[ck]
-                elif ck in seen_inflight:
-                    seen_inflight[ck] += (key,)
-                else:
-                    seen_inflight[ck] = (key,)
-                    tasks.append((key, s, cfg, ck))
+    topos = list(topologies) if topologies is not None else [None]
+    for topo in topos:
+        for coll in colls:
+            for n in gpu_counts:
+                for s in sizes:
+                    # Rescale only the GPU count; every other fabric field
+                    # of base_cfg (gpus_per_node, stations, buffering, tier
+                    # parameters...) is kept — pattern shape depends on
+                    # them.
+                    cfg = (base_cfg.replace(fabric=dataclasses.replace(
+                               base_cfg.fabric, n_gpus=n))
+                           if base_cfg is not None
+                           else paper_config(n, **cfg_kw))
+                    if coll is not None:
+                        cfg = cfg.replace(collective=coll)
+                    if topo is not None:
+                        cfg = cfg.replace(fabric=dataclasses.replace(
+                            cfg.fabric, topology=topo))
+                    key = (n, s)
+                    if collectives is not None:
+                        key = (coll,) + key
+                    if topologies is not None:
+                        key = (topo,) + key
+                    ck = _cache_key(s, cfg)
+                    if cache is not None and ck in cache:
+                        out[key] = cache[ck]
+                    elif ck in seen_inflight:
+                        seen_inflight[ck] += (key,)
+                    else:
+                        seen_inflight[ck] = (key,)
+                        tasks.append((key, s, cfg, ck))
 
     results: List[Tuple[tuple, Comparison]] = []
     pool_tasks = [(key, s, cfg) for (key, s, cfg, _ck) in tasks]

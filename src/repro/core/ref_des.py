@@ -95,7 +95,7 @@ def _probe_schedule(flows: List[Flow], cfg: SimConfig,
 
     if cfg.prefetch.enabled:
         for (t_first, fi, page, _i0, _i1) in epoch_spans(
-                flows, rb, fab.oneway_ns, page_bytes):
+                flows, rb, page_bytes):
             f = flows[fi]
             last_page = (f.base_addr + f.nbytes - 1) // page_bytes
             for j in range(1, cfg.prefetch.depth + 1):
@@ -142,7 +142,7 @@ class _RefTarget:
 
         for fi, f in enumerate(flows):
             n_req = max(1, math.ceil(f.nbytes / rb))
-            a0 = f.t_start + fab.oneway_ns
+            a0 = f.t_start + f.oneway_ns
             for i in range(n_req):
                 st = (i + f.stripe) % ns
                 page = (f.base_addr + i * rb) // page_bytes
@@ -182,7 +182,7 @@ class _RefTarget:
             if trace is not None:
                 trace[bounds[fi_base + fi] + i] = res.resolve - cur
             st.admit(cur, res.resolve)
-            done = res.resolve + fab.hbm_ns + fab.return_ns
+            done = res.resolve + fab.hbm_ns + flows[fi].return_ns
             completion = max(completion, done)
             c = st.next_candidate()
             if c is not None:
@@ -235,14 +235,15 @@ class RefSession:
         return total
 
     def run(self, nbytes: int, *, collective: Optional[str] = None,
-            n_gpus: Optional[int] = None, gap_ns: float = 0.0,
+            n_gpus: Optional[int] = None, rank_stride: int = 1,
+            gap_ns: float = 0.0,
             base_offset: int = 0, label: str = "") -> CollectiveResult:
         cfg = self.cfg
         fab = cfg.fabric
         if gap_ns:
             self.idle(gap_ns)
         name, fab_n, step_specs, dsts = resolve_collective(
-            cfg, nbytes, collective, n_gpus)
+            cfg, nbytes, collective, n_gpus, rank_stride)
         rb = fab.request_bytes
 
         # Trace only the first collective of the session, representative

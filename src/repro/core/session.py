@@ -41,16 +41,25 @@ from .engine import (EpochEngine, Flow, IterationResult, RunResult,
                      flows_for_dst)
 from .patterns import get_pattern, simulated_dsts
 from .tlb import Counters
+from .topology import get_topology
 
 
 def resolve_collective(cfg: SimConfig, nbytes: int,
-                       collective: Optional[str], n_gpus: Optional[int]):
+                       collective: Optional[str], n_gpus: Optional[int],
+                       rank_stride: int = 1):
     """(name, fab_n, step_specs, dsts) for one session run.
 
     Single source of truth for per-call pattern/group resolution and
     validation, shared by :class:`SimSession` and
     :class:`~repro.core.ref_des.RefSession` so the two sides of the
     oracle-equivalence contract cannot drift.
+
+    ``rank_stride`` places the group's logical ranks onto pod GPUs
+    ``0, stride, 2*stride, ...`` instead of ``0..g-1`` — a data-parallel
+    replica group whose members sit one per TP island (rank stride = tp).
+    On the flat topology placement is immaterial (any rank labeling is
+    isomorphic); on hierarchical topologies it decides which flows cross
+    tiers, e.g. a strided gradient ring pays the spine on every hop.
     """
     fab = cfg.fabric
     name = collective if collective is not None else cfg.collective
@@ -60,9 +69,35 @@ def resolve_collective(cfg: SimConfig, nbytes: int,
         raise ValueError(
             f"collective group of {fab_n.n_gpus} exceeds pod size "
             f"{fab.n_gpus}")
+    if rank_stride < 1:
+        raise ValueError(f"rank_stride must be >= 1, got {rank_stride}")
+    if (fab_n.n_gpus - 1) * rank_stride + 1 > fab.n_gpus:
+        raise ValueError(
+            f"strided group ({fab_n.n_gpus} ranks x stride {rank_stride}) "
+            f"exceeds pod size {fab.n_gpus}")
     pattern = get_pattern(name)
     step_specs = pattern.steps(nbytes, fab_n)
-    dsts = simulated_dsts(pattern, step_specs, cfg.symmetric, fab_n)
+    if rank_stride > 1:
+        step_specs = [
+            [dataclasses.replace(s, src=s.src * rank_stride,
+                                 dst=s.dst * rank_stride) for s in step]
+            for step in step_specs]
+    symmetric = cfg.symmetric
+    topo = get_topology(fab)
+    if symmetric and not topo.flat:
+        # On a tiered fabric the single-target shortcut is only exact when
+        # every rank of the group sees the same intra/inter tier mix:
+        # the whole group inside one tier-0 block, a stride that makes
+        # every pair inter-block, or a contiguous group covering whole
+        # blocks.  Anything else (a group straddling a partial block, a
+        # misaligned stride) mixes tiers per target — simulate every one.
+        block = topo.tier0_group()
+        g, s = fab_n.n_gpus, rank_stride
+        all_intra = (g - 1) * s + 1 <= block
+        uniform = s % block == 0 or (s == 1 and g % block == 0)
+        if not (all_intra or uniform):
+            symmetric = False
+    dsts = simulated_dsts(pattern, step_specs, symmetric, fab_n)
     return name, fab_n, step_specs, dsts
 
 
@@ -163,13 +198,16 @@ class SimSession:
 
     # -- core ----------------------------------------------------------------
     def run(self, nbytes: int, *, collective: Optional[str] = None,
-            n_gpus: Optional[int] = None, gap_ns: float = 0.0,
+            n_gpus: Optional[int] = None, rank_stride: int = 1,
+            gap_ns: float = 0.0,
             base_offset: int = 0, label: str = "",
             phase: str = "", window_parts=()) -> CollectiveResult:
         """Replay one collective starting at the current session time.
 
         ``collective``/``n_gpus`` override the session defaults per call
         (e.g. a TP all-gather over an 8-GPU subgroup inside a 64-GPU pod);
+        ``rank_stride`` places the group on strided pod ranks (a DP replica
+        ring spanning TP islands — see :func:`resolve_collective`);
         ``base_offset`` shifts the collective's buffer region inside each
         target's NPA space so distinct logical buffers touch distinct pages;
         ``gap_ns`` is a compute/idle window inserted *before* the collective
@@ -182,7 +220,7 @@ class SimSession:
         if gap_ns:
             self.idle(gap_ns)
         name, fab_n, step_specs, dsts = resolve_collective(
-            cfg, nbytes, collective, n_gpus)
+            cfg, nbytes, collective, n_gpus, rank_stride)
 
         # Trace only the first collective of the session (simulate's
         # iteration-0 semantics), on the representative target.

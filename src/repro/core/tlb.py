@@ -55,9 +55,14 @@ class LRUCache:
     def _commit(self, t: float) -> None:
         if not self._staged:
             return
-        ready = [k for k, ft in self._staged.items() if ft <= t]
-        for k in ready:
-            ft = self._staged.pop(k)
+        # Commit in fill-time order (stable on ties, so simultaneous fills
+        # keep their staging order): LRU recency — and therefore eviction
+        # order — must reflect when entries actually landed, not the order
+        # callers happened to stage them in.
+        ready = [(ft, k) for k, ft in self._staged.items() if ft <= t]
+        ready.sort(key=lambda e: e[0])
+        for ft, k in ready:
+            del self._staged[k]
             s = self._set_for(k)
             if k in s:
                 s.move_to_end(k)
@@ -154,18 +159,28 @@ class Counters:
 
 
 class PTWPool:
-    """Shared pool of ``n`` parallel page-table walkers (min-heap of free times)."""
+    """Shared pool of ``n`` parallel page-table walkers (min-heap of free times).
+
+    Two-phase protocol: :meth:`start` claims the earliest-free walker and
+    returns the actual walk start time (``max(t, free)``); the caller
+    computes the walk latency *from that start time* — PWC lookups are
+    timestamped when the walker actually issues them, not when the request
+    arrived — and then :meth:`finish` returns the walker to the pool.
+    Every ``start`` must be paired with exactly one ``finish``.
+    """
 
     def __init__(self, n: int):
         self._free = [0.0] * n
         heapq.heapify(self._free)
 
-    def acquire(self, t: float, busy_ns: float) -> float:
-        """Start a walk no earlier than ``t``; returns actual start time."""
+    def start(self, t: float) -> float:
+        """Claim a walker for a walk requested at ``t``; returns start time."""
         free = heapq.heappop(self._free)
-        start = max(t, free)
-        heapq.heappush(self._free, start + busy_ns)
-        return start
+        return max(t, free)
+
+    def finish(self, busy_until: float) -> None:
+        """Release the claimed walker, busy until ``busy_until``."""
+        heapq.heappush(self._free, busy_until)
 
 
 @dataclass
@@ -280,9 +295,12 @@ class TranslationState:
         if walk_done is not None:
             del self.l2_pending[page]
 
-        # Full miss: launch a page walk on the shared walker pool.
-        walk_lat = self._walk_latency(page, t2)
-        start = self.ptw.acquire(t2, walk_lat)
+        # Full miss: launch a page walk on the shared walker pool.  The
+        # walker may start later than the request time (pool saturation);
+        # PWC lookups and PT reads are timed from the actual walk start.
+        start = self.ptw.start(t2)
+        walk_lat = self._walk_latency(page, start)
+        self.ptw.finish(start + walk_lat)
         done = start + walk_lat
         self.counters.walks += 1
         self.l2_pending[page] = done

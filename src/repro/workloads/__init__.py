@@ -7,12 +7,13 @@
 from .calibrate import (ComputeProfile, PhaseWindow, calibrate,
                         default_cache_path)
 from .derive import (CollectiveCall, PodSpec, WorkloadTrace, derive_workload,
-                     layer_param_bytes, moe_a2a_bytes, resolve_pod)
+                     layer_param_bytes, moe_a2a_bytes, pod_fabric,
+                     resolve_pod)
 from .replay import ReplayResult, StepStats, buffer_layout, replay
 
 __all__ = [
     "CollectiveCall", "PodSpec", "WorkloadTrace", "derive_workload",
-    "layer_param_bytes", "moe_a2a_bytes", "resolve_pod",
+    "layer_param_bytes", "moe_a2a_bytes", "pod_fabric", "resolve_pod",
     "ReplayResult", "StepStats", "buffer_layout", "replay",
     "ComputeProfile", "PhaseWindow", "calibrate", "default_cache_path",
 ]

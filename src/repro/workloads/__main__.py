@@ -18,9 +18,10 @@ from __future__ import annotations
 import argparse
 from collections import Counter
 
-from ..core.config import paper_config
+from ..core.config import SimConfig
+from ..core.topology import TOPOLOGIES
 from .calibrate import ComputeProfile, calibrate, default_cache_path
-from .derive import PodSpec, derive_workload
+from .derive import PodSpec, derive_workload, pod_fabric
 from .replay import replay
 
 
@@ -36,6 +37,17 @@ def main(argv=None) -> int:
     p.add_argument("--gpus", type=int, default=16, help="pod size")
     p.add_argument("--steps", type=int, default=4,
                    help="model steps to replay (decode: tokens)")
+    p.add_argument("--topology", default="single_clos",
+                   choices=sorted(TOPOLOGIES),
+                   help="pod topology (repro.core.topology); hierarchical "
+                        "topologies map TP intra-tier and let the EP "
+                        "all-to-all cross the oversubscribed uplink")
+    p.add_argument("--leaf", type=int, default=0,
+                   help="two_tier: GPUs per leaf switch (0: fabric default)")
+    p.add_argument("--oversub", type=float, default=1.0,
+                   help="two_tier: leaf->spine oversubscription factor")
+    p.add_argument("--pod-size", type=int, default=0,
+                   help="multi_pod: GPUs per pod (0: whole fabric)")
     p.add_argument("--retention-ns", type=float, default=None,
                    help="flush TLBs when an idle gap exceeds this (default: "
                         "entries survive gaps)")
@@ -63,16 +75,18 @@ def main(argv=None) -> int:
     elif args.profile is not None:
         profile = ComputeProfile.load(args.profile)
 
-    trace = derive_workload(args.arch, args.shape, pod=PodSpec(),
-                            n_gpus=args.gpus, n_steps=args.steps,
-                            compute_profile=profile)
-    cfg = paper_config(args.gpus)
+    trace = derive_workload(
+        args.arch, args.shape,
+        pod=PodSpec(topology=args.topology, leaf_size=args.leaf,
+                    oversubscription=args.oversub, pod_size=args.pod_size),
+        n_gpus=args.gpus, n_steps=args.steps, compute_profile=profile)
+    cfg = SimConfig(fabric=pod_fabric(trace.pod))
     if args.retention_ns is not None:
         cfg = cfg.replace(tlb_retention_ns=args.retention_ns)
 
     pod = trace.pod
     print(f"# {trace.arch} / {trace.shape} on {pod.n_gpus} GPUs "
-          f"(ep={pod.ep} tp={pod.tp} dp={pod.dp}), "
+          f"(topology={pod.topology}, ep={pod.ep} tp={pod.tp} dp={pod.dp}), "
           f"{trace.tokens_per_step} tokens/step"
           + (f", {trace.n_microbatches} microbatches/pass"
              if trace.n_microbatches > 1 else ""))

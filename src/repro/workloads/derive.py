@@ -33,6 +33,9 @@ import math
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, List, Optional
 
+from ..core.config import FabricConfig
+from ..core.topology import get_topology
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..models.base import ModelConfig
 
@@ -42,8 +45,12 @@ class PodSpec:
     """The scale-up pod a workload is mapped onto.
 
     ``ep``/``tp``/``dp`` default per shape kind (see :func:`resolve_pod`):
-    inference uses the whole pod for TP and the largest compatible EP group;
-    train splits the pod into TP-of-8 x DP replicas.
+    inference uses the largest tier-0 group for TP (the whole pod on the
+    flat default, one leaf/pod on hierarchical topologies) and the largest
+    compatible EP group — which may span tiers, so MoE dispatch/combine
+    crosses the oversubscribed uplink while TP activation collectives stay
+    on cheap intra-tier paths; train splits the pod into TP x DP replicas
+    the same way.
     """
 
     n_gpus: int = 16
@@ -62,6 +69,21 @@ class PodSpec:
     # through one reused communication arena per collective kind
     # (NCCL-channel-style staging), collapsing the Link-TLB working set.
     buffer_reuse: str = "per_layer"
+    # Pod topology (repro.core.topology) + tier parameters, mirrored into
+    # the replay FabricConfig so the derived EP/TP/DP placement and the
+    # simulated fabric agree.
+    topology: str = "single_clos"
+    leaf_size: int = 0             # two_tier leaf (0 => fabric default)
+    oversubscription: float = 1.0  # two_tier leaf->spine uplink
+    pod_size: int = 0              # multi_pod pod (0 => whole fabric)
+
+
+def pod_fabric(pod: PodSpec) -> FabricConfig:
+    """The :class:`FabricConfig` a pod spec describes (replay + placement)."""
+    return FabricConfig(n_gpus=pod.n_gpus, topology=pod.topology,
+                        leaf_size=pod.leaf_size,
+                        oversubscription=pod.oversubscription,
+                        pod_size=pod.pod_size)
 
 
 @dataclass(frozen=True)
@@ -75,6 +97,11 @@ class CollectiveCall:
     compute_ns: float   # compute window preceding this collective
     buffer: str         # logical buffer id (distinct ids -> distinct pages)
     step: int           # model step (decode: token index)
+    # Pod-rank stride of the group (SimSession.run rank_stride): a DP
+    # replica group has one member per TP island, so its ring sits on
+    # ranks 0, tp, 2*tp, ... — on hierarchical topologies that is what
+    # makes gradient sync cross tiers.  1 = contiguous ranks.
+    stride: int = 1
     # Provenance of the window: the calibration phase whose *entire*
     # per-layer window precedes this call ("" when the gap is zero or an
     # accumulation of carried sublayer windows).  Lets a ComputeProfile be
@@ -131,18 +158,25 @@ def resolve_pod(pod: PodSpec, cfg: "ModelConfig", kind: str) -> PodSpec:
                 f"ep({ep}) does not divide n_experts({cfg.n_experts})")
     tp = pod.tp
     dp = pod.dp
+    # TP activation collectives are latency-bound and fire twice per
+    # sublayer: map them onto the largest all-pairs-tier-0 group (the whole
+    # pod on the flat default — unchanged — one leaf / one pod on
+    # hierarchical topologies).  EP keeps its expert-divisibility group and
+    # may span tiers: the MoE a2a is exactly the cross-tier traffic.
+    tier0 = get_topology(pod_fabric(pod)).tier0_group()
     if kind == "train":
         if tp is None:
+            cap = min(8, tier0)
             tp = 1
-            while tp < 8 and tp * 2 <= n and n % (tp * 2) == 0:
+            while tp * 2 <= cap and tp * 2 <= n and n % (tp * 2) == 0:
                 tp *= 2
         if dp is None:
             dp = n // tp
     else:
         if tp is None:
-            tp = n
+            tp = min(n, tier0)
         if dp is None:
-            dp = 1
+            dp = n // tp
     if tp * dp != n:
         raise ValueError(f"tp({tp}) x dp({dp}) != pod n_gpus({n})")
     return dataclasses.replace(pod, ep=ep, tp=tp, dp=dp)
@@ -285,7 +319,7 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     pending_parts: List[tuple] = []
 
     def emit(label, collective, nbytes, group, compute_ns, buffer, step,
-             phase=""):
+             phase="", stride=1):
         nonlocal pending_ns, pending_parts
         parts = list(pending_parts)
         if compute_ns or phase:
@@ -297,7 +331,7 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
         trace.calls.append(CollectiveCall(
             label, collective, nbytes, group,
             compute_ns=compute_ns + pending_ns, buffer=buffer, step=step,
-            phase=phase, window_parts=tuple(parts)))
+            phase=phase, window_parts=tuple(parts), stride=stride))
         pending_ns = 0.0
         pending_parts = []
 
@@ -341,9 +375,15 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
         # Train: bucketed gradient sync, one ring all-reduce per layer over
         # the DP group.  Distinct buffer per layer: gradient regions are as
         # large as the weights and never share pages with activations.
+        # DP replicas sit one per TP island (ranks p, p+tp, p+2*tp, ...),
+        # so on hierarchical topologies the ring is strided across tiers —
+        # gradient sync is cross-tier traffic.  On the flat default the
+        # stride is immaterial (any rank labeling is isomorphic) and is
+        # kept at 1, bit-for-bit the pre-topology trace.
         if spec.kind == "train" and dp > 1:
+            grad_stride = tp if pod.topology != "single_clos" else 1
             for i in range(cfg.n_layers):
                 nb = max(1, layer_param_bytes(cfg, i, pod.grad_bytes) // tp)
                 emit(f"s{step}/L{i}/grad_ar", "ring_allreduce", nb, dp,
-                     0.0, f"grad_l{i}", step)
+                     0.0, f"grad_l{i}", step, stride=grad_stride)
     return trace

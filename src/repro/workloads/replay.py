@@ -17,9 +17,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from ..core.config import SimConfig, paper_config
+from ..core.config import SimConfig
 from ..core.session import CollectiveResult, SimSession
-from .derive import CollectiveCall, WorkloadTrace
+from .derive import CollectiveCall, WorkloadTrace, pod_fabric
 
 
 @dataclass
@@ -95,8 +95,13 @@ def replay(trace: WorkloadTrace, *, cfg: Optional[SimConfig] = None,
     keeps the trace's derived gaps bit-for-bit.  A trace already derived
     *with* the profile replays identically either way — re-application is
     idempotent.
+
+    The default config simulates the pod the trace was derived for,
+    including its topology and tier parameters (:func:`~repro.workloads.
+    derive.pod_fabric`); pass ``cfg`` to override fabric or translation
+    knobs.
     """
-    cfg = cfg or paper_config(trace.pod.n_gpus)
+    cfg = cfg or SimConfig(fabric=pod_fabric(trace.pod))
     if cfg.fabric.n_gpus != trace.pod.n_gpus:
         raise ValueError(
             f"cfg pod size {cfg.fabric.n_gpus} != trace pod size "
@@ -114,6 +119,7 @@ def replay(trace: WorkloadTrace, *, cfg: Optional[SimConfig] = None,
     ideal_ns: Dict[tuple, float] = {}
     for c in trace.calls:
         kw = dict(collective=c.collective, n_gpus=c.group,
+                  rank_stride=c.stride,
                   gap_ns=c.compute_ns, base_offset=layout[c.buffer],
                   label=c.label, phase=c.phase,
                   window_parts=c.window_parts)
@@ -126,7 +132,7 @@ def replay(trace: WorkloadTrace, *, cfg: Optional[SimConfig] = None,
         st.walks += rec.counters.walks
         st.requests += rec.counters.requests
         if ideal is not None:
-            sig = (c.collective, c.nbytes, c.group)
+            sig = (c.collective, c.nbytes, c.group, c.stride)
             if sig not in ideal_ns:
                 irec = ideal.run(c.nbytes, **kw)
                 ideal_calls.append(irec)

@@ -50,16 +50,41 @@ class TestLRUCache:
 
 
 class TestPTWPool:
+    def _walk(self, p, t, busy_ns):
+        start = p.start(t)
+        p.finish(start + busy_ns)
+        return start
+
     def test_serializes_beyond_capacity(self):
         p = PTWPool(2)
-        assert p.acquire(0.0, 100.0) == 0.0
-        assert p.acquire(0.0, 100.0) == 0.0
-        assert p.acquire(0.0, 100.0) == 100.0  # third walk waits
+        assert self._walk(p, 0.0, 100.0) == 0.0
+        assert self._walk(p, 0.0, 100.0) == 0.0
+        assert self._walk(p, 0.0, 100.0) == 100.0  # third walk waits
 
     def test_parallel_within_capacity(self):
         p = PTWPool(100)
-        starts = [p.acquire(5.0, 1000.0) for _ in range(100)]
+        starts = [self._walk(p, 5.0, 1000.0) for _ in range(100)]
         assert all(s == 5.0 for s in starts)
+
+    def test_walk_latency_computed_from_actual_start(self):
+        # A queued walk's PWC lookups must be timestamped at the walker's
+        # real start time, not the request time: a PWC fill landing between
+        # request and start is visible to the delayed walk.
+        cfg = TranslationConfig()
+        s = TranslationState(dataclasses.replace(cfg, n_ptw=1),
+                             n_stations=16)
+        r1 = s.access(0, page=0, t=0.0)          # cold full walk
+        # Second walk on a *distinct upper-level region* requested while the
+        # single walker is busy: it starts at r1.resolve.  Its PWC lookups
+        # happen after r1's fills landed, so upper levels hit.
+        r2 = s.access(1, page=1, t=1.0)
+        assert r2.klass == "walk"
+        walk1_start = 1.0 + cfg.l1.hit_latency_ns + cfg.l2.hit_latency_ns
+        assert r1.resolve > walk1_start          # walker genuinely busy
+        pwc = cfg.pwc
+        warm_lat = (len(pwc.entries) * pwc.lookup_latency_ns
+                    + cfg.mem_access_ns)         # all-PWC-hit + leaf read
+        assert r2.resolve == pytest.approx(r1.resolve + warm_lat)
 
 
 # ----------------------------------------------------- unit: hierarchy walk
@@ -261,3 +286,84 @@ class TestScheduler:
         plan = s.plan_all_to_all(total_bytes=8 * MB)
         assert plan.warmup_chunk_bytes == 0
         assert plan.n_chunks >= 1
+
+
+# -------------------------------------------------------- sweep memoization
+class TestSweepMemoization:
+    """The dedup bookkeeping of ratsim.sweep: duplicate grid points collapse
+    through ``seen_inflight``, a caller-supplied ``cache`` memoizes across
+    calls, and the serial and pool paths produce identical keys/values."""
+
+    def _spy(self, monkeypatch):
+        calls = []
+        real = ratsim._sweep_point
+
+        def spy(task):
+            calls.append(task[0])
+            return real(task)
+
+        monkeypatch.setattr(ratsim, "_sweep_point", spy)
+        return calls
+
+    def test_duplicate_grid_points_priced_once(self, monkeypatch):
+        calls = self._spy(monkeypatch)
+        out = ratsim.sweep([1 * MB, 1 * MB], [8, 8], workers=0)
+        assert set(out) == {(8, 1 * MB)}
+        assert calls == [(8, 1 * MB)]          # one simulation, four entries
+        assert out[(8, 1 * MB)].baseline.completion_ns > 0
+
+    def test_inflight_dedup_fans_result_to_all_keys(self, monkeypatch):
+        # Duplicates within one call share one Comparison object via the
+        # seen_inflight bookkeeping (no cache needed).
+        calls = self._spy(monkeypatch)
+        out = ratsim.sweep([1 * MB], [8, 8, 8], workers=0)
+        assert len(calls) == 1
+        assert out[(8, 1 * MB)] is not None
+
+    def test_cache_memoizes_across_calls(self, monkeypatch):
+        calls = self._spy(monkeypatch)
+        cache = {}
+        first = ratsim.sweep([1 * MB, 4 * MB], [8], cache=cache, workers=0)
+        assert len(calls) == 2 and len(cache) == 2
+        for (nbytes, cfg_repr) in cache:       # keyed by (nbytes, repr(cfg))
+            assert isinstance(nbytes, int) and isinstance(cfg_repr, str)
+        second = ratsim.sweep([1 * MB, 4 * MB], [8], cache=cache, workers=0)
+        assert len(calls) == 2                 # nothing re-simulated
+        for k in first:
+            assert second[k] is first[k]       # the very same objects
+
+    def test_cache_respects_config_identity(self, monkeypatch):
+        # Same (n, size) under a different collective is a different point:
+        # the cache must not alias them.
+        calls = self._spy(monkeypatch)
+        cache = {}
+        a = ratsim.sweep([1 * MB], [8], cache=cache, workers=0)
+        b = ratsim.sweep([1 * MB], [8], collectives=["ring_allreduce"],
+                         cache=cache, workers=0)
+        assert len(calls) == 2 and len(cache) == 2
+        assert (a[(8, 1 * MB)].baseline.completion_ns
+                != b[("ring_allreduce", 8, 1 * MB)].baseline.completion_ns)
+
+    def test_serial_and_pool_paths_identical(self):
+        sizes, gpus = [1 * MB, 4 * MB], [8, 16]
+        serial = ratsim.sweep(sizes, gpus, workers=0)
+        pooled = ratsim.sweep(sizes, gpus, workers=2)
+        assert set(serial) == set(pooled)
+        for k in serial:
+            assert (serial[k].baseline.completion_ns
+                    == pooled[k].baseline.completion_ns)
+            assert (serial[k].ideal.completion_ns
+                    == pooled[k].ideal.completion_ns)
+            assert (serial[k].baseline.counters.walks
+                    == pooled[k].baseline.counters.walks)
+
+    def test_cache_hits_skip_the_pool_entirely(self, monkeypatch):
+        cache = {}
+        ratsim.sweep([1 * MB], [8], cache=cache, workers=0)
+
+        def boom(task):  # pragma: no cover - must never run
+            raise AssertionError("cache hit should not re-simulate")
+
+        monkeypatch.setattr(ratsim, "_sweep_point", boom)
+        out = ratsim.sweep([1 * MB], [8], cache=cache, workers=0)
+        assert out[(8, 1 * MB)].baseline.completion_ns > 0

@@ -1,0 +1,39 @@
+"""Smoke-run the example scripts (slow CI tier).
+
+Each example must exit 0 and say which collective/topology it ran — the
+scripts previously assumed the all-to-all/single-Clos default in their
+hard-coded output text.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script):
+    return subprocess.run(
+        [sys.executable, script], cwd=ROOT, capture_output=True, text=True,
+        timeout=900)
+
+
+def test_quickstart_smoke():
+    r = _run("examples/quickstart.py")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "collective=all_to_all" in r.stdout
+    assert "topology=single_clos" in r.stdout
+    assert "two_tier" in r.stdout           # the fig14 teaser section
+
+
+def test_workload_replay_smoke():
+    pytest.importorskip("jax")              # arch registry configs need jax
+    r = _run("examples/workload_replay.py")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "collective=all_to_all" in r.stdout
+    assert "topology=single_clos" in r.stdout
+    assert "topology=two_tier" in r.stdout
+    assert "collectives: all_gather, all_to_all, reduce_scatter" in r.stdout
