@@ -1,11 +1,19 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV.  ``--bench-engine`` instead times a fixed sweep grid through the
 # epoch engine and writes BENCH_engine.json (uploaded as a CI artifact so
-# the engine's performance trajectory is tracked PR over PR).
+# the engine's performance trajectory is tracked PR over PR);
+# ``--check-against benchmarks/BENCH_baseline.json`` turns that grid into a
+# regression gate: any point whose wall time exceeds the committed baseline
+# by more than ``--tolerance`` fails the run (use ``--update-baseline``
+# for intentional resets, ``--current`` to gate a pre-measured JSON
+# without re-running the grid).
 import argparse
 import json
 import sys
 import time
+import traceback
+
+BASELINE_PATH = "benchmarks/BENCH_baseline.json"
 
 
 def figures() -> int:
@@ -18,6 +26,9 @@ def figures() -> int:
         try:
             rows = fn()
         except Exception as e:  # noqa: BLE001
+            # The CSV cell keeps the one-line summary; the full traceback
+            # goes to stderr so CI logs are actionable.
+            traceback.print_exc(file=sys.stderr)
             print(f"{fn.__name__},0.0,ERROR:{type(e).__name__}:{e}")
             failures += 1
             continue
@@ -43,7 +54,14 @@ def _bench_points():
     ]
 
 
-def bench_engine(out_path: str) -> int:
+def measure_engine(reps: int = 3) -> dict:
+    """Time the fixed grid; returns the BENCH_engine.json payload.
+
+    Each point is best-of-``reps``: the minimum wall time is the least
+    noise-contaminated estimate of the engine's cost, which is what a
+    cross-run regression gate must compare (means absorb scheduler noise
+    and flake the gate).
+    """
     from repro.core import ratsim
     from repro.core.config import FabricConfig, SimConfig
 
@@ -52,9 +70,11 @@ def bench_engine(out_path: str) -> int:
     for topo, n, nbytes in _bench_points():
         fab = FabricConfig(n_gpus=n, topology=topo, leaf_size=16,
                            oversubscription=2.0, pod_size=16)
-        t0 = time.perf_counter()
-        c = ratsim.compare(nbytes, n, cfg=SimConfig(fabric=fab))
-        wall = time.perf_counter() - t0
+        wall = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            c = ratsim.compare(nbytes, n, cfg=SimConfig(fabric=fab))
+            wall = min(wall, time.perf_counter() - t0)
         points.append({
             "topology": topo, "n_gpus": n, "nbytes": nbytes,
             "wall_s": round(wall, 4),
@@ -64,14 +84,64 @@ def bench_engine(out_path: str) -> int:
         })
         print(f"# {topo}/gpus{n}/{nbytes >> 20}MB: {wall:.3f}s "
               f"(deg={c.degradation:.4f})", file=sys.stderr)
-    payload = {"grid": "engine-v1",
-               "total_wall_s": round(time.perf_counter() - t_all, 4),
-               "points": points}
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"# wrote {out_path} (total {payload['total_wall_s']}s)",
-          file=sys.stderr)
-    return 0
+    return {"grid": "engine-v1",
+            "total_wall_s": round(time.perf_counter() - t_all, 4),
+            "points": points}
+
+
+def _point_key(p: dict) -> tuple:
+    return (p["topology"], p["n_gpus"], p["nbytes"])
+
+
+def _point_name(key: tuple) -> str:
+    topo, n, nbytes = key
+    return f"{topo}/gpus{n}/{nbytes >> 20}MB"
+
+
+def check_against(current: dict, baseline: dict, tolerance: float,
+                  min_delta_s: float = 0.05) -> list:
+    """Per-point wall-time regression gate.
+
+    Returns the list of failure messages (empty = gate passes) and prints
+    the full delta table either way, so CI logs always show the trajectory.
+    ``min_delta_s`` is an absolute floor: a point only fails when it is
+    both ``tolerance`` slower *and* at least that many seconds slower —
+    millisecond points jitter past any relative tolerance.  A grid
+    mismatch (missing or extra points, e.g. a stale committed baseline
+    after the grid changed) also fails — reset intentionally with
+    ``--update-baseline``.
+    """
+    base = {_point_key(p): p for p in baseline.get("points", [])}
+    cur = {_point_key(p): p for p in current.get("points", [])}
+    failures = []
+    print(f"# bench gate: wall-time tolerance +{tolerance:.0%} per point")
+    print(f"{'point':<28s} {'base_s':>8s} {'cur_s':>8s} {'delta':>8s}")
+    for key, cp in cur.items():
+        bp = base.get(key)
+        if bp is None:
+            print(f"{_point_name(key):<28s} {'-':>8s} "
+                  f"{cp['wall_s']:>8.3f} {'new':>8s}")
+            failures.append(f"{_point_name(key)}: not in baseline "
+                            f"(grid changed? --update-baseline)")
+            continue
+        delta = (cp["wall_s"] - bp["wall_s"]) / bp["wall_s"] \
+            if bp["wall_s"] else float("inf")
+        regressed = (delta > tolerance
+                     and cp["wall_s"] - bp["wall_s"] > min_delta_s)
+        flag = " REGRESSED" if regressed else ""
+        print(f"{_point_name(key):<28s} {bp['wall_s']:>8.3f} "
+              f"{cp['wall_s']:>8.3f} {delta:>+7.1%}{flag}")
+        if regressed:
+            failures.append(
+                f"{_point_name(key)}: {bp['wall_s']:.3f}s -> "
+                f"{cp['wall_s']:.3f}s ({delta:+.1%} > +{tolerance:.0%})")
+    for key in base:
+        if key not in cur:
+            failures.append(f"{_point_name(key)}: in baseline but not "
+                            f"measured (grid changed? --update-baseline)")
+    for msg in failures:
+        print(f"# FAIL {msg}", file=sys.stderr)
+    return failures
 
 
 def main() -> None:
@@ -81,8 +151,57 @@ def main() -> None:
                         "artifact instead of printing the figure CSV")
     p.add_argument("--out", default="BENCH_engine.json",
                    help="output path for --bench-engine")
+    p.add_argument("--check-against", default=None, metavar="BASELINE",
+                   help="gate the engine grid against this committed "
+                        "baseline JSON (fails on per-point wall-time "
+                        "regressions beyond --tolerance)")
+    p.add_argument("--current", default=None, metavar="JSON",
+                   help="use a pre-measured BENCH_engine.json for "
+                        "--check-against / --update-baseline instead of "
+                        "re-running the grid")
+    p.add_argument("--tolerance", type=float, default=0.35,
+                   help="allowed fractional wall-time regression per "
+                        "point (default 0.35)")
+    p.add_argument("--min-delta-s", type=float, default=0.05,
+                   help="absolute wall-time floor: a point fails only "
+                        "when it is also at least this many seconds "
+                        "slower (default 0.05)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="write the measured grid to the baseline path "
+                        "(intentional reset); combine with --check-against "
+                        "to choose the path")
     args = p.parse_args()
-    sys.exit(bench_engine(args.out) if args.bench_engine else figures())
+
+    if not (args.bench_engine or args.check_against
+            or args.update_baseline):
+        if args.current:
+            p.error("--current requires --check-against or "
+                    "--update-baseline (it would otherwise be ignored)")
+        sys.exit(figures())
+
+    if args.current:
+        with open(args.current) as f:
+            payload = json.load(f)
+    else:
+        payload = measure_engine()
+        if args.bench_engine:
+            with open(args.out, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"# wrote {args.out} (total {payload['total_wall_s']}s)",
+                  file=sys.stderr)
+
+    rc = 0
+    if args.update_baseline:
+        path = args.check_against or BASELINE_PATH
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# baseline updated: {path}", file=sys.stderr)
+    elif args.check_against:
+        with open(args.check_against) as f:
+            baseline = json.load(f)
+        rc = 1 if check_against(payload, baseline, args.tolerance,
+                                args.min_delta_s) else 0
+    sys.exit(rc)
 
 
 if __name__ == '__main__':

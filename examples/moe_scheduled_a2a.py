@@ -22,7 +22,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_smoke_config
 from repro.kernels.compat import shard_map
 from repro.core.scheduler import TranslationAwareScheduler
-from repro.models import api
 from repro.models.moe import moe_block_ep, init_moe
 from repro.models.base import ParamBuilder
 from repro.launch.mesh import make_local_mesh

@@ -62,7 +62,8 @@ def main():
     plan = sch.plan_all_to_all(8 * MB)
     print(f"  8MB MoE all-to-all: warm-up chunk {plan.warmup_chunk_bytes//MB}MB, "
           f"{plan.n_chunks} pipeline chunks, est. speedup {plan.est_speedup:.3f}x,"
-          f" per-peer buffer {plan.per_peer_buffer_bytes//MB}MB (Fig 11: one page/peer)")
+          f" per-peer buffer {plan.per_peer_buffer_bytes//MB}MB "
+          "(Fig 11: one page/peer)")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
-from ..models.base import ModelConfig
-from .shapes import SHAPES, ShapeSpec, shape_applicable
+from ..models.spec import ModelConfig
+# Re-exported shape registry: consumers reach SHAPES/ShapeSpec through
+# repro.configs alongside the architecture registry.
+from .shapes import SHAPES, ShapeSpec, shape_applicable  # noqa: F401
 
 ARCHS: List[str] = [
     "phi_3_vision_4_2b",

@@ -1,7 +1,7 @@
 """Shared smoke-config reduction: same family, tiny dimensions."""
 from __future__ import annotations
 
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 
 
 def reduce_config(cfg: ModelConfig, **overrides) -> ModelConfig:

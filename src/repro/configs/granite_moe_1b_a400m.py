@@ -3,7 +3,7 @@
 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]  24L d_model=1024 16H
 (GQA kv=8) expert d_ff=512 vocab=49155, MoE 32e top-8 on every layer.
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

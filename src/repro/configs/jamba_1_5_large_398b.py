@@ -6,7 +6,7 @@ layer.  SSM layers use our unified SSD formulation (d_state=16 per the
 Jamba paper; DESIGN.md notes the Mamba-1 -> SSD adaptation).  Attention
 layers use a 4096 sliding window for the long_500k shape (sub-quadratic).
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 PATTERN = ("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba",

@@ -4,7 +4,7 @@
 head_dim=64, vocab=50280.  No attention, no FFN (the SSD mixer is the
 whole block).
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

@@ -3,7 +3,7 @@
 [hf:mistralai/Mistral-Large-Instruct-2407; unverified]  88L d_model=12288
 96H (GQA kv=8) d_ff=28672 vocab=32768.
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

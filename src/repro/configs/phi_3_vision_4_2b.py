@@ -4,7 +4,7 @@
 (GQA kv=32 => MHA) d_ff=8192 vocab=32064.  The vision frontend is a stub:
 ``input_specs`` provides precomputed patch embeddings [B, 256, d_model].
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

@@ -3,7 +3,7 @@
 [arXiv:2407.10671; hf]  28L d_model=1536 12H (GQA kv=2) d_ff=8960
 vocab=151936, QKV bias.
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

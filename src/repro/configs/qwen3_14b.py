@@ -3,7 +3,7 @@
 [hf:Qwen/Qwen3-14B; hf]  40L d_model=5120 40H (GQA kv=8) d_ff=17408
 vocab=151936, qk_norm.
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

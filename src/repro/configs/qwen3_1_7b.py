@@ -3,7 +3,7 @@
 [hf:Qwen/Qwen3-1.7B; hf]  28L d_model=2048 16H (GQA kv=8) d_ff=6144
 vocab=151936, qk_norm.
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

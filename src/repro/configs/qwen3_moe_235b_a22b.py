@@ -3,7 +3,7 @@
 [hf:Qwen/Qwen3-30B-A3B family; hf]  94L d_model=4096 64H (GQA kv=4)
 expert d_ff=1536 vocab=151936, MoE 128e top-8, per-head qk RMSNorm.
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

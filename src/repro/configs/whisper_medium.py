@@ -4,7 +4,7 @@
 d_model=1024 16H (kv=16) d_ff=4096 vocab=51865.  ``input_specs`` provides
 precomputed frame embeddings [B, 1500, d_model].
 """
-from ..models.base import ModelConfig
+from ..models.spec import ModelConfig
 from ._smoke import reduce_config
 
 CONFIG = ModelConfig(

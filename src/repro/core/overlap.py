@@ -19,7 +19,6 @@ Both are pure ``jax.lax`` programs: under ``shard_map`` they lower to real
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

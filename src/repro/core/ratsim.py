@@ -29,9 +29,7 @@ from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, MutableMapping, Optional, Tuple
 
-from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
-                     PreTranslationConfig, PrefetchConfig, paper_config,
-                     KB, MB, GB)
+from .config import SimConfig, FabricConfig, paper_config, MB
 from .engine import simulate, RunResult
 from .session import SimSession
 

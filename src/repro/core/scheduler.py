@@ -20,7 +20,6 @@ simulator itself never runs inside a training step.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Optional
 

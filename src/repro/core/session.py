@@ -37,7 +37,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from .config import SimConfig
-from .engine import (EpochEngine, Flow, IterationResult, RunResult,
+from .engine import (EpochEngine, IterationResult, RunResult,
                      flows_for_dst)
 from .patterns import get_pattern, simulated_dsts
 from .tlb import Counters

@@ -18,9 +18,9 @@ from __future__ import annotations
 import heapq
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
-from .config import TranslationConfig, TLBConfig
+from .config import TranslationConfig
 
 INF = float("inf")
 

@@ -28,7 +28,6 @@ import tempfile
 import time
 import traceback
 
-import jax
 
 from .. import configs
 from ..configs.shapes import SHAPES, shape_applicable
@@ -171,13 +170,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         })
         if verbose:
             r = cell["roofline"]
+            ufr = cell["useful_flops_ratio"]
             print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
                   f"compile {cell['compile_s']}s, "
                   f"peak {cell['memory']['peak_bytes']/2**30:.2f} GiB/dev "
                   f"(fits={cell['fits_hbm']}), "
                   f"t_comp={r['t_compute_s']:.4f}s t_mem={r['t_memory_s']:.4f}s "
                   f"t_coll={r['t_collective_s']:.4f}s -> {r['bottleneck']}; "
-                  f"useful={cell['useful_flops_ratio'] and round(cell['useful_flops_ratio'],3)}")
+                  f"useful={ufr and round(ufr, 3)}")
     except Exception as e:  # noqa: BLE001 — report, continue the sweep
         cell["status"] = "error"
         cell["error"] = f"{type(e).__name__}: {e}"

@@ -18,8 +18,6 @@ tests/test_hlo_analysis.py.
 """
 from __future__ import annotations
 
-import json
-import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

@@ -2,10 +2,9 @@
 from __future__ import annotations
 
 import json
-import pathlib
 from typing import Dict, List, Optional
 
-from .dryrun import RESULTS, cell_path
+from .dryrun import RESULTS
 from .. import configs
 from ..configs.shapes import SHAPES
 

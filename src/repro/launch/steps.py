@@ -7,8 +7,7 @@ the dry-run can ``.lower().compile()`` from ShapeDtypeStructs alone.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

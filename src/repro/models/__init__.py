@@ -1,6 +1,23 @@
-from .base import ModelConfig, set_logical_rules, logical_to_pspec, with_logical
-from .api import init, loss_fn, forward, prefill, decode_step
+# Lazy package init (PEP 562): the JAX model zoo (.base/.api) only loads
+# when one of its names is touched, so jax-free callers can import
+# repro.models.spec (the plain ModelConfig dataclass) without pulling jax —
+# the serving CLI and workload derivation run offline through that path.
+_BASE = ("ModelConfig", "set_logical_rules", "logical_to_pspec",
+         "with_logical")
+_API = ("init", "loss_fn", "forward", "prefill", "decode_step")
 
-__all__ = ["ModelConfig", "set_logical_rules", "logical_to_pspec",
-           "with_logical", "init", "loss_fn", "forward", "prefill",
-           "decode_step"]
+__all__ = list(_BASE + _API)
+
+
+def __getattr__(name):
+    if name in _BASE:
+        from . import base
+        return getattr(base, name)
+    if name in _API:
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,7 +1,7 @@
 """Family-dispatching model API: init / loss / prefill / decode_step."""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

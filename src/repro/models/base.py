@@ -8,89 +8,21 @@ pattern, implemented minimally.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-# ---------------------------------------------------------------------------
-# Model configuration shared by every architecture family.
-# ---------------------------------------------------------------------------
+# Model configuration shared by every architecture family.  The dataclass
+# itself is jax-free (repro.models.spec) so the config registry and the
+# workload/serving layers can resolve architectures without importing jax;
+# re-exported here for the JAX tier and backward compatibility.
+from .spec import ModelConfig
 
-
-@dataclass(frozen=True)
-class ModelConfig:
-    name: str
-    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
-    n_layers: int
-    d_model: int
-    n_heads: int
-    n_kv_heads: int
-    d_head: int
-    d_ff: int
-    vocab_size: int
-    qk_norm: bool = False
-    qkv_bias: bool = False
-    rope_theta: float = 1e6
-    norm_eps: float = 1e-6
-    # MoE
-    n_experts: int = 0
-    top_k: int = 0
-    d_ff_expert: int = 0
-    moe_every: int = 1               # MoE FFN on layers where idx % every == r
-    capacity_factor: float = 1.25
-    moe_impl: str = "gather"         # "gather" (pjit auto) | "ep" (shard_map)
-    # SSM / hybrid
-    layer_pattern: Tuple[str, ...] = ()   # repeating pattern, e.g. 7x mamba + attn
-    ssm_state: int = 0
-    ssm_expand: int = 2
-    ssm_head_dim: int = 64
-    ssm_conv: int = 4
-    ssm_chunk: int = 256
-    # encoder-decoder (whisper-style)
-    is_encoder_decoder: bool = False
-    n_enc_layers: int = 0
-    enc_frames: int = 1500
-    # VLM (stub frontend provides patch embeddings)
-    n_img_tokens: int = 0
-    # attention extras
-    sliding_window: int = 0          # 0 = full causal
-    # execution
-    dtype: Any = jnp.bfloat16
-    param_dtype: Any = jnp.float32
-    remat: bool = True
-    scan_layers: bool = True
-    # Chunk FFN weights over the hidden dim inside a lax.scan: bounds the
-    # number of simultaneously-gathered FSDP weight shards (XLA cannot hoist
-    # an all-gather out of a loop).  1 = unchunked.
-    ffn_chunks: int = 1
-    # Same idea for SSM layers: scan over head groups so z/x/out projection
-    # weights are gathered one group at a time.  1 = unchunked.
-    ssm_scan_groups: int = 1
-
-    @property
-    def pattern(self) -> Tuple[str, ...]:
-        if self.layer_pattern:
-            return self.layer_pattern
-        return ("attn",)
-
-    @property
-    def block_size(self) -> int:
-        return len(self.pattern)
-
-    @property
-    def n_blocks(self) -> int:
-        assert self.n_layers % self.block_size == 0, (
-            f"{self.name}: n_layers {self.n_layers} not divisible by "
-            f"pattern period {self.block_size}")
-        return self.n_layers // self.block_size
-
-    def replace(self, **kw) -> "ModelConfig":
-        return dataclasses.replace(self, **kw)
+__all__ = ["ModelConfig", "ParamBuilder", "stack_layer_params",
+           "stacked_specs", "set_logical_rules", "mesh_axis_size",
+           "logical_to_pspec", "with_logical"]
 
 
 # ---------------------------------------------------------------------------
@@ -114,7 +46,8 @@ class ParamBuilder:
                stddev: Optional[float] = None, fan_in: Optional[int] = None):
         assert len(shape) == len(axes), (name, shape, axes)
         if stddev is None:
-            fi = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[-1]
+            fi = (fan_in if fan_in is not None
+                  else shape[-2] if len(shape) > 1 else shape[-1])
             stddev = 1.0 / math.sqrt(max(1, fi))
         v = (jax.random.normal(self._next_key(), shape, self.dtype) * stddev)
         self.params[name] = v

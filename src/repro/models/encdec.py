@@ -8,13 +8,14 @@ encoder output.  We use RoPE + RMSNorm + SwiGLU uniformly across the zoo
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .base import ModelConfig, ParamBuilder, stack_layer_params, stacked_specs, with_logical
+from .base import (ModelConfig, ParamBuilder, stack_layer_params,
+                   stacked_specs)
 from . import layers as L
 from .layers import KVCache
 

@@ -17,7 +17,6 @@ with residual passthrough.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ decode caches), ``decode_step`` (single token with caches).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +104,8 @@ def _layer_forward(cfg: ModelConfig, kind: str, pos: int, p, x):
     return x, aux
 
 
-def _block_forward(cfg: ModelConfig, bp, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _block_forward(cfg: ModelConfig, bp,
+                   x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One block (cfg.pattern), full sequence.  Returns (x, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     for pos, kind in enumerate(cfg.pattern):
@@ -138,7 +139,8 @@ def run_blocks(cfg: ModelConfig, params, x: jnp.ndarray):
 
 
 def forward(cfg: ModelConfig, params, tokens: jnp.ndarray,
-            img_embeds: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+            img_embeds: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """tokens: [B, S_text] -> logits [B, S_total, V].  VLM prepends image."""
     x = L.embed(params, cfg, tokens)
     if cfg.n_img_tokens > 0:

@@ -11,9 +11,8 @@ what lets mistral-123B / qwen3-moe-235B / jamba-398B fit a 256-chip v5e pod
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,9 +92,10 @@ def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
                 v_new.astype(state_dtype)
 
         out = jax.tree.map(upd, grads, state["m"], state["v"], params)
-        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        is_t = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
         return new_p, {"m": new_m, "v": new_v, "count": count}
 
     def state_specs(param_specs, param_shapes=None):

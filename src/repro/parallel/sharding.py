@@ -23,10 +23,9 @@ serve parameters and activations at once.
 from __future__ import annotations
 
 import enum
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Re-exported jax-version shims: every shard_map context in the repo (the

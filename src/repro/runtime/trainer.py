@@ -10,8 +10,8 @@ optional gradient compression for the cross-pod reduction.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,18 @@
+# Request-level serving traffic over workload replay: seeded arrival
+# processes (Poisson / bursty / trace file), a continuous-batching scheduler
+# whose live batch composition sizes each step's collectives, and
+# per-request TTFT / inter-token latency accounting with a cold-vs-warm
+# Link-TLB split.  `python -m repro.serving --arch ... --rps ...` runs
+# offline (no jax).  DESIGN.md §11.
+from .arrivals import (Request, bursty_requests, poisson_requests,
+                       trace_requests)
+from .scheduler import ContinuousBatcher, RequestStats, StepPlan
+from .simulate import (ServingStep, TrafficPoint, TrafficResult,
+                       serving_layout, simulate_traffic, sweep_traffic)
+
+__all__ = [
+    "Request", "bursty_requests", "poisson_requests", "trace_requests",
+    "ContinuousBatcher", "RequestStats", "StepPlan",
+    "ServingStep", "TrafficPoint", "TrafficResult", "serving_layout",
+    "simulate_traffic", "sweep_traffic",
+]

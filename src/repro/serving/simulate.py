@@ -1,0 +1,361 @@
+"""Request-level serving simulation over persistent-TLB replay (DESIGN.md §11).
+
+:func:`simulate_traffic` drives one :class:`~repro.core.session.SimSession`
+with a stream of inference requests instead of a fixed step loop: a
+continuous-batching scheduler (:mod:`repro.serving.scheduler`) decides each
+step's live batch composition, :class:`repro.workloads.derive.StepEmitter`
+sizes that step's collectives from it (EP dispatch bytes scale with active
+tokens; prefill chunks interleave with decode tokens), and the session
+prices them with whatever Link-TLB warmth the preceding traffic left
+behind.  When the pod has no work the session *idles* to the next arrival —
+under ``SimConfig.tlb_retention_ns`` a long enough gap flushes the warmed
+translations, so the first steps after a quiet period re-pay the cold
+walks.  That interaction between arrival burstiness and TLB retention is
+the tail-latency mechanism this layer exists to measure.
+
+The zero-translation counterfactual runs the *same* schedule (admission
+decisions are driven by the baseline clock) on an ideal fabric: with
+translation disabled a collective's duration depends only on its signature,
+so each signature is priced once and the ideal timeline is accumulated
+analytically.  Per-request degradation is then baseline vs ideal
+time-to-first-token on an identical step sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.config import (PrefetchConfig, PreTranslationConfig, SimConfig)
+from ..core.session import SimSession
+from ..workloads.derive import (PodSpec, StepEmitter, WorkloadTrace,
+                                pod_fabric, resolve_pod)
+from ..workloads.replay import buffer_layout
+from .arrivals import (Request, bursty_requests, poisson_requests,
+                       trace_requests)
+from .scheduler import ContinuousBatcher, RequestStats
+
+_PCTS = (50.0, 95.0, 99.0)
+
+
+@dataclass
+class ServingStep:
+    """One engine step: live batch composition and priced timing."""
+
+    step: int
+    t_start: float
+    t_end: float
+    decode_tokens: int
+    prefill_tokens: int
+    comm_ns: float
+    ideal_comm_ns: float
+    compute_ns: float
+    walks: int
+
+    @property
+    def degradation(self) -> float:
+        return (self.comm_ns / self.ideal_comm_ns
+                if self.ideal_comm_ns else float("nan"))
+
+
+@dataclass
+class TrafficResult:
+    """Per-request and per-step statistics of one serving simulation."""
+
+    arch: str
+    pod: PodSpec
+    cfg: SimConfig
+    requests: List[RequestStats]
+    steps: List[ServingStep]
+    steps_capped: bool = False
+
+    # -- aggregation ---------------------------------------------------------
+    @property
+    def finished(self) -> List[RequestStats]:
+        return [r for r in self.requests if r.finished]
+
+    @property
+    def first_token_served(self) -> List[RequestStats]:
+        return [r for r in self.requests if r.first_token_ns is not None]
+
+    def ttft_percentiles(self, pcts: Sequence[float] = _PCTS) -> Dict[float, float]:
+        vals = [r.ttft_ns for r in self.first_token_served]
+        if not vals:
+            return {p: float("nan") for p in pcts}
+        return {p: float(np.percentile(vals, p)) for p in pcts}
+
+    def itl_percentiles(self, pcts: Sequence[float] = _PCTS) -> Dict[float, float]:
+        vals = [v for r in self.requests for v in r.itl_ns]
+        if not vals:
+            return {p: float("nan") for p in pcts}
+        return {p: float(np.percentile(vals, p)) for p in pcts}
+
+    def ttft_degradations(self) -> List[float]:
+        return [r.ttft_degradation for r in self.first_token_served
+                if r.ttft_degradation is not None]
+
+    @property
+    def mean_ttft_degradation(self) -> float:
+        d = self.ttft_degradations()
+        return float(np.mean(d)) if d else float("nan")
+
+    @property
+    def p99_ttft_degradation(self) -> float:
+        d = self.ttft_degradations()
+        return float(np.percentile(d, 99.0)) if d else float("nan")
+
+    # Pod-level comm split, aggregated from steps.  (Per-request
+    # ``RequestStats.cold_comm_ns`` is *experienced* latency — every active
+    # request counts a shared step in full — so summing it over requests
+    # would multiply-count overlapping batches; these are the honest
+    # pod-time aggregates.)
+    @property
+    def cold_comm_ns(self) -> float:
+        return sum(s.comm_ns for s in self.steps if s.walks > 0)
+
+    @property
+    def warm_comm_ns(self) -> float:
+        return sum(s.comm_ns for s in self.steps if s.walks == 0)
+
+    @property
+    def cold_steps(self) -> int:
+        return sum(1 for s in self.steps if s.walks > 0)
+
+
+def _resolve_arch(arch):
+    if isinstance(arch, str):
+        from ..configs import get_config         # jax-free (models.spec)
+        return get_config(arch)
+    return arch
+
+
+def serving_layout(mcfg, pod: PodSpec, max_step_tokens: int,
+                   page_bytes: int) -> Dict[str, int]:
+    """Page-aligned buffer offsets covering the *largest possible* step.
+
+    Collective sizes vary with live batch composition, but a logical
+    buffer's pages must stay put across steps (that is what makes repeated
+    steps warm); regions are therefore sized for the worst-case step —
+    every decode slot occupied plus a full prefill chunk.
+    """
+    em = StepEmitter(mcfg, pod)
+    em.step(0, max_step_tokens)
+    probe = WorkloadTrace(arch=mcfg.name, shape="serving", pod=pod,
+                          calls=em.calls)
+    return buffer_layout(probe, page_bytes)
+
+
+def simulate_traffic(arch, requests: List[Request], *,
+                     pod: Optional[PodSpec] = None,
+                     n_gpus: Optional[int] = None,
+                     cfg: Optional[SimConfig] = None,
+                     max_decode_slots: int = 32,
+                     prefill_chunk_tokens: int = 512,
+                     steps_cap: Optional[int] = None,
+                     compute_profile=None) -> TrafficResult:
+    """Serve ``requests`` on a simulated pod; returns per-request latencies.
+
+    ``arch`` is a registry name (resolved without importing jax) or any
+    ``ModelConfig``-shaped object.  ``cfg`` overrides the simulated fabric
+    and translation knobs (``tlb_retention_ns`` is what couples arrival
+    gaps to TLB cold misses); the default simulates the pod the workload
+    is mapped onto, exactly as workload replay does.  ``steps_cap`` bounds
+    the number of engine steps (unfinished requests simply stay
+    unfinished); percentiles are computed over served requests.
+    """
+    mcfg = _resolve_arch(arch)
+    pod = pod or PodSpec()
+    if n_gpus is not None:
+        pod = dataclasses.replace(pod, n_gpus=n_gpus)
+    pod = resolve_pod(pod, mcfg, "decode")
+    cfg = cfg or SimConfig(fabric=pod_fabric(pod))
+    if cfg.fabric.n_gpus != pod.n_gpus:
+        raise ValueError(f"cfg pod size {cfg.fabric.n_gpus} != "
+                         f"pod size {pod.n_gpus}")
+
+    layout = serving_layout(mcfg, pod,
+                            max_decode_slots + prefill_chunk_tokens,
+                            cfg.translation.page_bytes)
+    sess = SimSession(cfg, compute_profile=compute_profile)
+    ideal = SimSession(cfg.ideal(), compute_profile=compute_profile)
+    ideal_ns: Dict[tuple, float] = {}   # signature -> priced ideal duration
+    ideal_clock = 0.0
+
+    batcher = ContinuousBatcher(requests,
+                                max_decode_slots=max_decode_slots,
+                                prefill_chunk_tokens=prefill_chunk_tokens)
+    em = StepEmitter(mcfg, pod)
+    steps: List[ServingStep] = []
+    capped = False
+    while not batcher.drained:
+        if steps_cap is not None and len(steps) >= steps_cap:
+            capped = True
+            break
+        plan = batcher.plan(sess.t)
+        if plan is None:
+            nxt = batcher.next_arrival_ns()
+            if nxt is None:          # nothing in flight, nothing to come
+                break
+            # Idle to the next arrival: ages (and beyond the retention
+            # window, flushes) the warmed TLBs.  The ideal timeline waits
+            # for the same arrival.
+            sess.idle(nxt - sess.t)
+            ideal_clock = max(ideal_clock, nxt)
+            continue
+
+        # Causality floor for the ideal timeline: the counterfactual run
+        # executes the same step sequence, but a step serving a request's
+        # *first* prefill chunk cannot start before that request arrived —
+        # without this, a faster-than-baseline ideal clock could emit
+        # first tokens before their requests exist, inflating degradation
+        # with an unphysical queueing term.
+        new_arrivals = [r.req.arrival_ns for r, _t in plan.prefill
+                        if r.prefill_done == 0]
+        if new_arrivals:
+            ideal_clock = max(ideal_clock, max(new_arrivals))
+
+        t0 = sess.t
+        base = len(em.calls)
+        em.step(len(steps), plan.total_tokens, prefix=f"t{len(steps)}")
+        comm = ideal_comm = compute = 0.0
+        walks = 0
+        for c in em.calls[base:]:
+            kw = dict(collective=c.collective, n_gpus=c.group,
+                      rank_stride=c.stride, gap_ns=c.compute_ns,
+                      base_offset=layout[c.buffer], label=c.label,
+                      phase=c.phase, window_parts=c.window_parts)
+            rec = sess.run(c.nbytes, **kw)
+            comm += rec.completion_ns
+            walks += rec.counters.walks
+            compute += sess.resolve_gap(c.compute_ns, c.phase,
+                                        c.window_parts)
+            sig = (c.collective, c.nbytes, c.group, c.stride)
+            if sig not in ideal_ns:
+                ideal_ns[sig] = ideal.run(c.nbytes, **kw).completion_ns
+            ideal_comm += ideal_ns[sig]
+        ideal_clock += compute + ideal_comm
+        steps.append(ServingStep(
+            step=len(steps), t_start=t0, t_end=sess.t,
+            decode_tokens=plan.decode_tokens,
+            prefill_tokens=plan.prefill_tokens,
+            comm_ns=comm, ideal_comm_ns=ideal_comm, compute_ns=compute,
+            walks=walks))
+        batcher.commit(plan, sess.t, ideal_clock, comm, ideal_comm, walks)
+
+    return TrafficResult(arch=mcfg.name, pod=pod, cfg=cfg,
+                         requests=batcher.stats, steps=steps,
+                         steps_capped=capped)
+
+
+# ------------------------------------------------------------------ sweeps
+@dataclass(frozen=True)
+class TrafficPoint:
+    """One point of a serving sweep — fully describes a simulation.
+
+    Frozen and hashable: the point is the sweep key, and (with its seed) it
+    *is* the arrival stream, so a point prices identically on the serial
+    and the pooled executor.
+    """
+
+    arch: str = "granite-moe-1b-a400m"
+    rps: float = 8.0
+    arrival: str = "poisson"            # poisson | bursty
+    n_requests: int = 64
+    seed: int = 0
+    n_gpus: int = 16
+    topology: str = "single_clos"
+    leaf_size: int = 0
+    oversubscription: float = 1.0
+    pod_size: int = 0
+    l2_entries: int = 0                 # 0 => translation default
+    retention_ns: Optional[float] = None
+    steps_cap: Optional[int] = None
+    burst_size: int = 8
+    burstiness: float = 16.0
+    prompt_mean: int = 256
+    output_mean: int = 32
+    max_decode_slots: int = 32
+    prefill_chunk_tokens: int = 512
+    pretranslation: bool = False        # paper §6.1 fused probes
+    prefetch: bool = False              # paper §6.2 software prefetch
+    trace_path: Optional[str] = None    # arrival="trace"
+
+    def requests(self) -> List[Request]:
+        kw = dict(prompt_mean=self.prompt_mean, output_mean=self.output_mean,
+                  seed=self.seed)
+        if self.arrival == "poisson":
+            return poisson_requests(self.n_requests, self.rps, **kw)
+        if self.arrival == "bursty":
+            return bursty_requests(self.n_requests, self.rps,
+                                   burst_size=self.burst_size,
+                                   burstiness=self.burstiness, **kw)
+        if self.arrival == "trace":
+            if not self.trace_path:
+                raise ValueError("arrival='trace' needs trace_path")
+            return trace_requests(self.trace_path, limit=self.n_requests)
+        raise ValueError(f"unknown arrival process {self.arrival!r}")
+
+    def sim_config(self) -> SimConfig:
+        pod = self.pod_spec()
+        cfg = SimConfig(fabric=pod_fabric(pod),
+                        tlb_retention_ns=self.retention_ns)
+        if self.l2_entries:
+            tr = cfg.translation
+            cfg = cfg.replace(translation=dataclasses.replace(
+                tr, l2=dataclasses.replace(tr.l2, entries=self.l2_entries)))
+        if self.pretranslation:
+            cfg = cfg.replace(pretranslation=PreTranslationConfig(
+                enabled=True, lead_time_ns=3000.0, pages_per_flow=0))
+        if self.prefetch:
+            cfg = cfg.replace(prefetch=PrefetchConfig(enabled=True, depth=2))
+        return cfg
+
+    def pod_spec(self) -> PodSpec:
+        return PodSpec(n_gpus=self.n_gpus, topology=self.topology,
+                       leaf_size=self.leaf_size,
+                       oversubscription=self.oversubscription,
+                       pod_size=self.pod_size)
+
+
+def _traffic_point(task: Tuple[TrafficPoint]) -> TrafficResult:
+    (pt,) = task
+    return simulate_traffic(pt.arch, pt.requests(), pod=pt.pod_spec(),
+                            cfg=pt.sim_config(),
+                            max_decode_slots=pt.max_decode_slots,
+                            prefill_chunk_tokens=pt.prefill_chunk_tokens,
+                            steps_cap=pt.steps_cap)
+
+
+def sweep_traffic(points: Sequence[TrafficPoint], *,
+                  workers: Optional[int] = None
+                  ) -> Dict[TrafficPoint, TrafficResult]:
+    """Price every :class:`TrafficPoint`, fanned over a process pool.
+
+    Mirrors :func:`repro.core.ratsim.sweep`: ``workers=None`` sizes the
+    pool to the host, ``workers=0`` forces the serial in-process path, and
+    both paths return bit-for-bit identical results — each point's arrival
+    stream is regenerated from its seed inside whichever process prices it,
+    never shipped across the pool boundary.
+    """
+    from ..core.ratsim import _spawnable
+    tasks = [(pt,) for pt in points]
+    results: List[TrafficResult] = []
+    n_workers = (min(len(tasks), os.cpu_count() or 1)
+                 if workers is None else workers)
+    if n_workers >= 2 and len(tasks) > 1 and _spawnable():
+        try:
+            ctx = multiprocessing.get_context("spawn")
+            with ProcessPoolExecutor(max_workers=n_workers,
+                                     mp_context=ctx) as pool:
+                results = list(pool.map(_traffic_point, tasks))
+        except (OSError, BrokenProcessPool):
+            results = []
+    if not results and tasks:
+        results = [_traffic_point(t) for t in tasks]
+    return dict(zip(points, results))

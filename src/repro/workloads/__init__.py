@@ -6,13 +6,14 @@
 # kernel tier (repro.workloads.calibrate).
 from .calibrate import (ComputeProfile, PhaseWindow, calibrate,
                         default_cache_path)
-from .derive import (CollectiveCall, PodSpec, WorkloadTrace, derive_workload,
-                     layer_param_bytes, moe_a2a_bytes, pod_fabric,
-                     resolve_pod)
+from .derive import (CollectiveCall, PodSpec, StepEmitter, WorkloadTrace,
+                     derive_workload, layer_param_bytes, moe_a2a_bytes,
+                     pod_fabric, resolve_pod)
 from .replay import ReplayResult, StepStats, buffer_layout, replay
 
 __all__ = [
-    "CollectiveCall", "PodSpec", "WorkloadTrace", "derive_workload",
+    "CollectiveCall", "PodSpec", "StepEmitter", "WorkloadTrace",
+    "derive_workload",
     "layer_param_bytes", "moe_a2a_bytes", "pod_fabric", "resolve_pod",
     "ReplayResult", "StepStats", "buffer_layout", "replay",
     "ComputeProfile", "PhaseWindow", "calibrate", "default_cache_path",

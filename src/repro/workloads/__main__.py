@@ -10,8 +10,9 @@ later steps reuse the warmed entries.
 ``--calibrate`` measures the Pallas kernel tier (interpret mode off-TPU)
 and replays with the resulting per-phase compute windows instead of the
 roofline, caching the profile JSON under ``calibration/``; ``--profile``
-loads a previously cached JSON instead of measuring (profile loading is
-jax-free, though resolving a registry ``--arch`` still imports jax).
+loads a previously cached JSON instead of measuring.  Everything except
+``--calibrate`` itself is jax-free (the registry resolves through
+``repro.models.spec``).
 """
 from __future__ import annotations
 

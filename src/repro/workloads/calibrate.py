@@ -45,13 +45,10 @@ import math
 import time
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
-from typing import TYPE_CHECKING, Dict, Optional
+from typing import Dict, Optional
 
 from .derive import (PodSpec, _layer_is_moe, layer_roofline_ns, resolve_pod,
                      step_shape)
-
-if TYPE_CHECKING:  # pragma: no cover - typing only
-    from ..models.base import ModelConfig
 
 # v2: per-phase `layers` multiplicity entered the anchor normalization —
 # v1 caches carry unweighted calibrated windows and must be re-measured.

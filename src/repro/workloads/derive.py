@@ -23,8 +23,9 @@ Derivation formulas (first-order, documented in DESIGN.md §8):
 * **Compute windows**: roofline gaps between collectives,
   ``flops / (peak_tflops * mfu)``, with fwd ``2·P_active·T`` (×3 for train).
 
-Pure-Python sizing only — importing this module does not import jax; the
-registry lookup (``arch`` by name) lazily imports :mod:`repro.configs`.
+Pure-Python sizing only — importing this module does not import jax, and
+neither does the registry lookup (``arch`` by name): :mod:`repro.configs`
+resolves architectures through the jax-free :mod:`repro.models.spec`.
 """
 from __future__ import annotations
 
@@ -251,6 +252,109 @@ def layer_roofline_ns(cfg: "ModelConfig", i: int, t_step: int,
     return mixer_ns, ffn_ns
 
 
+class StepEmitter:
+    """Emits the per-layer collective sequence of model steps.
+
+    Single source of truth for the per-layer emission loop, shared by
+    :func:`derive_workload` (fixed ``t_step`` per shape spec) and the
+    serving layer (:mod:`repro.serving`), where each step's ``t_step`` is
+    the *live* batch composition — decode tokens plus admitted prefill
+    chunk — so collective sizes track continuous batching step by step.
+
+    Compute windows accumulate between emitted collectives: when a sublayer
+    emits no traffic (e.g. ``tp == 1``), its window still ages the session
+    and is delivered as the next call's gap.  ``_pending_parts`` records the
+    ``(phase, ns)`` decomposition of the carried amount so the gap stays
+    re-resolvable against a compute profile at replay time.  The pending
+    state persists across :meth:`step` calls, exactly as a session clock
+    would.
+    """
+
+    def __init__(self, cfg: "ModelConfig", pod: PodSpec, window=None):
+        from .calibrate import ffn_phase, mixer_phase   # pure-python helpers
+        self.cfg = cfg
+        self.pod = pod
+        # window(phase, roofline_ns) -> ns: profile resolution hook.
+        self.window = window if window is not None else (lambda ph, ns: ns)
+        self.calls: List[CollectiveCall] = []
+        self._mixer_phase = mixer_phase
+        self._ffn_phase = ffn_phase
+        self._pending_ns = 0.0
+        self._pending_parts: List[tuple] = []
+
+    def emit(self, label, collective, nbytes, group, compute_ns, buffer,
+             step, phase="", stride=1):
+        parts = list(self._pending_parts)
+        if compute_ns or phase:
+            parts.append((phase, compute_ns))
+        # A carried window mixes sublayer provenances: drop the single-phase
+        # tag (window_parts keeps the exact decomposition).
+        if self._pending_ns:
+            phase = ""
+        self.calls.append(CollectiveCall(
+            label, collective, nbytes, group,
+            compute_ns=compute_ns + self._pending_ns, buffer=buffer,
+            step=step, phase=phase, window_parts=tuple(parts),
+            stride=stride))
+        self._pending_ns = 0.0
+        self._pending_parts = []
+
+    def carry(self, phase: str, compute_ns: float) -> None:
+        """Accumulate a window that emits no traffic of its own."""
+        self._pending_ns += compute_ns
+        self._pending_parts.append((phase, compute_ns))
+
+    def step(self, step: int, t_step: int, *, flop_mult: float = 1.0,
+             prefix: Optional[str] = None) -> None:
+        """Emit one model step (every layer) over ``t_step`` active tokens.
+
+        ``prefix`` overrides the default ``s{step}`` label prefix (serving
+        labels steps by request batch instead).
+        """
+        cfg, pod = self.cfg, self.pod
+        ep, tp = pod.ep, pod.tp
+        prefix = f"s{step}" if prefix is None else prefix
+        per_layer = pod.buffer_reuse == "per_layer"
+        actv_bytes = t_step * cfg.d_model * pod.dtype_bytes
+        t_loc = max(1, t_step // ep)
+        a2a = (moe_a2a_bytes(cfg, t_loc, ep, pod.dtype_bytes)
+               if cfg.n_experts and ep > 1 else 0)
+        for i in range(cfg.n_layers):
+            tag = f"{prefix}/L{i}"
+            suffix = f"_l{i}" if per_layer else ""
+            mp, fp = self._mixer_phase(cfg, i), self._ffn_phase(cfg, i)
+            roof_mixer, roof_ffn = layer_roofline_ns(cfg, i, t_step, pod,
+                                                     flop_mult)
+            attn_ns = self.window(mp, roof_mixer)
+            is_moe = _layer_is_moe(cfg, i)
+            ffn_ns = self.window(fp, roof_ffn)
+            # Mixer sublayer (attention or SSM): sequence-parallel TP pair,
+            # ag -> mixer compute -> rs (the compute window sits between the
+            # pair, so it is the rs that finds aged TLBs under retention).
+            if tp > 1:
+                self.emit(f"{tag}/mixer_ag", "all_gather", actv_bytes, tp,
+                          0.0, "actv" + suffix, step)
+                self.emit(f"{tag}/mixer_rs", "reduce_scatter", actv_bytes,
+                          tp, attn_ns, "actv" + suffix, step, phase=mp)
+            else:
+                self.carry(mp, attn_ns)
+            # FFN sublayer: EP all-to-all pair for MoE layers (dispatch ->
+            # expert compute -> combine); MoE without an EP group (ep == 1,
+            # all experts local) and dense FFNs shard over TP instead.
+            if is_moe and a2a > 0:
+                self.emit(f"{tag}/moe_dispatch", "all_to_all", a2a, ep,
+                          0.0, "moe_disp" + suffix, step)
+                self.emit(f"{tag}/moe_combine", "all_to_all", a2a, ep,
+                          ffn_ns, "moe_comb" + suffix, step, phase=fp)
+            elif tp > 1 and (cfg.d_ff > 0 or is_moe):
+                self.emit(f"{tag}/ffn_ag", "all_gather", actv_bytes, tp,
+                          0.0, "actv" + suffix, step)
+                self.emit(f"{tag}/ffn_rs", "reduce_scatter", actv_bytes, tp,
+                          ffn_ns, "actv" + suffix, step, phase=fp)
+            else:
+                self.carry(fp, ffn_ns)
+
+
 def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
                     n_gpus: Optional[int] = None,
                     n_steps: int = 1,
@@ -270,12 +374,11 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     ``None`` (the default) keeps the roofline bit-for-bit.
     """
     if isinstance(arch, str):
-        from ..configs import get_config            # lazy: imports jax
+        from ..configs import get_config            # jax-free registry
         cfg = get_config(arch)
     else:
         cfg = arch
     from ..configs.shapes import SHAPES             # pure-python
-    from .calibrate import ffn_phase, mixer_phase   # pure-python helpers
     spec = SHAPES[shape]
 
     pod = pod or PodSpec()
@@ -301,77 +404,13 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
         return roofline_ns
 
     t_step, n_micro, flop_mult = step_shape(spec, pod)
-    t_loc = max(1, t_step // ep)
 
     trace = WorkloadTrace(arch=cfg.name, shape=shape, pod=pod,
                           tokens_per_step=t_step, n_microbatches=n_micro)
-    actv_bytes = t_step * cfg.d_model * pod.dtype_bytes
-    a2a = (moe_a2a_bytes(cfg, t_loc, ep, pod.dtype_bytes)
-           if cfg.n_experts and ep > 1 else 0)
-
-    per_layer = pod.buffer_reuse == "per_layer"
-    # Compute windows accumulate between emitted collectives: when a
-    # sublayer emits no traffic (e.g. tp == 1), its window still ages the
-    # session and is delivered as the next call's gap.  ``pending_parts``
-    # records the (phase, ns) decomposition of the carried amount so the
-    # gap stays re-resolvable against a profile at replay time.
-    pending_ns = 0.0
-    pending_parts: List[tuple] = []
-
-    def emit(label, collective, nbytes, group, compute_ns, buffer, step,
-             phase="", stride=1):
-        nonlocal pending_ns, pending_parts
-        parts = list(pending_parts)
-        if compute_ns or phase:
-            parts.append((phase, compute_ns))
-        # A carried window mixes sublayer provenances: drop the single-phase
-        # tag (window_parts keeps the exact decomposition).
-        if pending_ns:
-            phase = ""
-        trace.calls.append(CollectiveCall(
-            label, collective, nbytes, group,
-            compute_ns=compute_ns + pending_ns, buffer=buffer, step=step,
-            phase=phase, window_parts=tuple(parts), stride=stride))
-        pending_ns = 0.0
-        pending_parts = []
-
+    em = StepEmitter(cfg, pod, window=window)
+    trace.calls = em.calls
     for step in range(n_steps):
-        for i in range(cfg.n_layers):
-            tag = f"s{step}/L{i}"
-            suffix = f"_l{i}" if per_layer else ""
-            mp, fp = mixer_phase(cfg, i), ffn_phase(cfg, i)
-            roof_mixer, roof_ffn = layer_roofline_ns(cfg, i, t_step, pod,
-                                                     flop_mult)
-            attn_ns = window(mp, roof_mixer)
-            is_moe = _layer_is_moe(cfg, i)
-            ffn_ns = window(fp, roof_ffn)
-            # Mixer sublayer (attention or SSM): sequence-parallel TP pair,
-            # ag -> mixer compute -> rs (the compute window sits between the
-            # pair, so it is the rs that finds aged TLBs under retention).
-            if tp > 1:
-                emit(f"{tag}/mixer_ag", "all_gather", actv_bytes, tp,
-                     0.0, "actv" + suffix, step)
-                emit(f"{tag}/mixer_rs", "reduce_scatter", actv_bytes, tp,
-                     attn_ns, "actv" + suffix, step, phase=mp)
-            else:
-                pending_ns += attn_ns
-                pending_parts.append((mp, attn_ns))
-            # FFN sublayer: EP all-to-all pair for MoE layers (dispatch ->
-            # expert compute -> combine); MoE without an EP group (ep == 1,
-            # all experts local) and dense FFNs shard over TP instead.
-            if is_moe and a2a > 0:
-                emit(f"{tag}/moe_dispatch", "all_to_all", a2a, ep,
-                     0.0, "moe_disp" + suffix, step)
-                emit(f"{tag}/moe_combine", "all_to_all", a2a, ep,
-                     ffn_ns, "moe_comb" + suffix, step, phase=fp)
-            elif tp > 1 and (cfg.d_ff > 0 or is_moe):
-                emit(f"{tag}/ffn_ag", "all_gather", actv_bytes, tp,
-                     0.0, "actv" + suffix, step)
-                emit(f"{tag}/ffn_rs", "reduce_scatter", actv_bytes, tp,
-                     ffn_ns, "actv" + suffix, step, phase=fp)
-            else:
-                pending_ns += ffn_ns
-                pending_parts.append((fp, ffn_ns))
+        em.step(step, t_step, flop_mult=flop_mult)
         # Train: bucketed gradient sync, one ring all-reduce per layer over
         # the DP group.  Distinct buffer per layer: gradient regions are as
         # large as the weights and never share pages with activations.
@@ -384,6 +423,6 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
             grad_stride = tp if pod.topology != "single_clos" else 1
             for i in range(cfg.n_layers):
                 nb = max(1, layer_param_bytes(cfg, i, pod.grad_bytes) // tp)
-                emit(f"s{step}/L{i}/grad_ar", "ring_allreduce", nb, dp,
-                     0.0, f"grad_l{i}", step, stride=grad_stride)
+                em.emit(f"s{step}/L{i}/grad_ar", "ring_allreduce", nb, dp,
+                        0.0, f"grad_l{i}", step, stride=grad_stride)
     return trace

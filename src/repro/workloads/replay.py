@@ -19,7 +19,7 @@ from typing import Dict, List, Optional
 
 from ..core.config import SimConfig
 from ..core.session import CollectiveResult, SimSession
-from .derive import CollectiveCall, WorkloadTrace, pod_fabric
+from .derive import WorkloadTrace, pod_fabric
 
 
 @dataclass

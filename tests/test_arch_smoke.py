@@ -130,7 +130,6 @@ def test_full_configs_match_assignment():
 
 def test_param_counts_in_expected_range():
     """Sanity: analytic parameter counts are near the advertised sizes."""
-    import math
     expect = {
         "qwen2-1.5b": (1.2e9, 2.2e9),
         "qwen3-14b": (12e9, 17e9),

@@ -1,0 +1,79 @@
+"""Tests for the engine micro-benchmark regression gate (benchmarks/run.py).
+
+The CI job measures the fixed grid, uploads it as an artifact, then gates
+it against the committed ``benchmarks/BENCH_baseline.json``; these tests
+pin the gate's semantics — most importantly that a synthetic 2x-slower
+point demonstrably fails — without ever timing anything.
+"""
+import copy
+import json
+import pathlib
+
+from benchmarks.run import BASELINE_PATH, _bench_points, check_against
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def payload(walls):
+    return {"grid": "engine-v1",
+            "points": [{"topology": t, "n_gpus": n, "nbytes": b,
+                        "wall_s": w}
+                       for (t, n, b), w in zip(_bench_points(), walls)]}
+
+
+class TestCheckAgainst:
+    def test_identical_passes(self):
+        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        assert check_against(copy.deepcopy(base), base, 0.35) == []
+
+    def test_2x_slower_point_fails(self):
+        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        cur = copy.deepcopy(base)
+        cur["points"][1]["wall_s"] = 2.0          # 2x the 1.0s baseline
+        failures = check_against(cur, base, 0.35)
+        assert len(failures) == 1
+        assert "gpus64" in failures[0] and "+100.0%" in failures[0]
+
+    def test_within_tolerance_passes(self):
+        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        cur = copy.deepcopy(base)
+        cur["points"][1]["wall_s"] = 1.3          # +30% < 35%
+        assert check_against(cur, base, 0.35) == []
+
+    def test_small_absolute_jitter_ignored(self):
+        # A 5ms point doubling is timer noise, not an engine regression:
+        # the absolute floor keeps the relative gate from flaking.
+        base = payload([0.005, 1.0, 0.8, 0.9, 0.3])
+        cur = copy.deepcopy(base)
+        cur["points"][0]["wall_s"] = 0.010
+        assert check_against(cur, base, 0.35) == []
+        cur["points"][0]["wall_s"] = 0.500        # a real 100x blowup fails
+        assert len(check_against(cur, base, 0.35)) == 1
+
+    def test_faster_never_fails(self):
+        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        cur = payload([0.1, 0.2, 0.1, 0.1, 0.1])
+        assert check_against(cur, base, 0.35) == []
+
+    def test_grid_mismatch_fails_both_ways(self):
+        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        cur = copy.deepcopy(base)
+        dropped = cur["points"].pop()             # missing point
+        failures = check_against(cur, base, 0.35)
+        assert any("not measured" in f for f in failures)
+        extra = copy.deepcopy(base)
+        extra["points"].append(dict(dropped, topology="ring"))
+        failures = check_against(extra, base, 0.35)
+        assert any("not in baseline" in f for f in failures)
+
+
+class TestCommittedBaseline:
+    def test_baseline_matches_bench_grid(self):
+        """The committed baseline covers exactly the current grid, so the
+        CI gate can never silently skip a point."""
+        with open(ROOT / BASELINE_PATH) as f:
+            base = json.load(f)
+        keys = {(p["topology"], p["n_gpus"], p["nbytes"])
+                for p in base["points"]}
+        assert keys == set(_bench_points())
+        assert all(p["wall_s"] > 0 for p in base["points"])

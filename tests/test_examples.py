@@ -29,6 +29,14 @@ def test_quickstart_smoke():
     assert "two_tier" in r.stdout           # the fig14 teaser section
 
 
+def test_serving_traffic_smoke():
+    r = _run("examples/serving_traffic.py")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "bursty serving" in r.stdout
+    assert "TTFT p50/p95/p99" in r.stdout
+    assert "tlb_retention_ns=50us" in r.stdout
+
+
 def test_workload_replay_smoke():
     pytest.importorskip("jax")              # arch registry configs need jax
     r = _run("examples/workload_replay.py")

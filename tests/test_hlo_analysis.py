@@ -7,11 +7,10 @@ module (which has no loops, so XLA counts everything).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax import lax
 
-from repro.launch.hlo_analysis import analyze_hlo_text, HloModule
+from repro.launch.hlo_analysis import analyze_hlo_text
 
 
 def _compiled(f, *args):

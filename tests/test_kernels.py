@@ -35,7 +35,8 @@ ATTN_SHAPES = [
 @pytest.mark.parametrize("B,Sq,Sk,H,KV,Dh,causal", ATTN_SHAPES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_matches_ref(B, Sq, Sk, H, KV, Dh, causal, dtype):
-    ks = jax.random.split(jax.random.fold_in(KEY, abs(hash((B, Sq, H, KV, Dh))) % (2**31)), 3)
+    ks = jax.random.split(
+        jax.random.fold_in(KEY, abs(hash((B, Sq, H, KV, Dh))) % (2**31)), 3)
     q = jax.random.normal(ks[0], (B, Sq, H, Dh), dtype)
     k = jax.random.normal(ks[1], (B, Sk, KV, Dh), dtype)
     v = jax.random.normal(ks[2], (B, Sk, KV, Dh), dtype)
@@ -126,7 +127,8 @@ SSD_SHAPES = [
 @pytest.mark.parametrize("b,S,H,P,N,chunk", SSD_SHAPES)
 def test_ssd_scan_matches_model_oracle(b, S, H, P, N, chunk):
     from repro.models.ssd import ssd_chunked
-    ks = jax.random.split(jax.random.fold_in(KEY, abs(hash((b, S, H, P, N))) % (2**31)), 5)
+    ks = jax.random.split(
+        jax.random.fold_in(KEY, abs(hash((b, S, H, P, N))) % (2**31)), 5)
     x = jax.random.normal(ks[0], (b, S, H, P), jnp.float32)
     dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H), jnp.float32))
     A_log = jax.random.normal(ks[2], (H,), jnp.float32) * 0.5

@@ -1,7 +1,5 @@
 """Substrate tests: data determinism, checkpoint/restart, failure injection,
 gradient compression convergence parity, elastic control plane, optimizers."""
-import math
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.data import SyntheticLMDataset, DataIterator, make_batch_iterator
+from repro.data import SyntheticLMDataset, DataIterator
 from repro.checkpoint import (CheckpointManager, save_checkpoint,
                               load_checkpoint, latest_step)
 from repro.runtime import (Trainer, TrainerConfig, ElasticController,

@@ -1,0 +1,309 @@
+"""Tests for the request-level serving layer (repro.serving).
+
+Covers: seeded arrival generation (bit-for-bit determinism, also across the
+serial vs pooled sweep executors — the arrival stream is data derived from
+the seed, not a side effect of execution), continuous-batching invariants
+(slot bounds, chunked prefill interleaving, token/latency-sample
+conservation), live-batch collective sizing, the TLB-retention contract
+(an idle gap longer than ``tlb_retention_ns`` between bursts re-pays the
+cold walks), per-request accounting (causality, cold-vs-warm split), and
+the offline (jax-free) CLI.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.config import SimConfig
+from repro.serving import (Request, TrafficPoint, bursty_requests,
+                           poisson_requests, simulate_traffic,
+                           sweep_traffic, trace_requests)
+from repro.workloads import PodSpec, pod_fabric, resolve_pod
+from repro.workloads.derive import StepEmitter
+
+
+class TinyServeMoE:
+    """Duck-typed stand-in for ModelConfig (only the fields derive reads)."""
+    name = "tiny-serve-moe"
+    n_layers = 4
+    d_model = 512
+    n_heads = 8
+    n_kv_heads = 4
+    d_head = 64
+    d_ff = 0
+    n_experts = 16
+    top_k = 2
+    d_ff_expert = 256
+    moe_every = 1
+    capacity_factor = 1.25
+
+
+TINY = TinyServeMoE()
+
+
+def tiny_requests(arrivals, prompt=24, output=3):
+    return [Request(i, float(t), prompt, output)
+            for i, t in enumerate(arrivals)]
+
+
+# ---------------------------------------------------------------- arrivals
+class TestArrivals:
+    def test_poisson_deterministic_for_seed(self):
+        a = poisson_requests(32, 100.0, seed=11)
+        b = poisson_requests(32, 100.0, seed=11)
+        assert a == b
+        assert a != poisson_requests(32, 100.0, seed=12)
+
+    def test_bursty_deterministic_and_bursty(self):
+        a = bursty_requests(32, 100.0, seed=3, burst_size=4)
+        assert a == bursty_requests(32, 100.0, seed=3, burst_size=4)
+        gaps = sorted(y.arrival_ns - x.arrival_ns
+                      for x, y in zip(a, a[1:]))
+        # 8 bursts of 4 -> the 7 largest gaps are the off periods; their
+        # mean dwarfs the mean intra-burst gap (draws are exponential, so
+        # compare means, not extremes).
+        inter, intra = gaps[-7:], gaps[:-7]
+        assert (sum(inter) / len(inter)) > 5 * (sum(intra) / len(intra))
+
+    def test_streams_sorted_with_positive_lengths(self):
+        for reqs in (poisson_requests(64, 50.0, seed=0),
+                     bursty_requests(64, 50.0, seed=0)):
+            assert all(x.arrival_ns <= y.arrival_ns
+                       for x, y in zip(reqs, reqs[1:]))
+            assert all(r.prompt_tokens >= 1 and r.output_tokens >= 1
+                       for r in reqs)
+            assert [r.rid for r in reqs] == list(range(64))
+
+    def test_trace_roundtrip(self, tmp_path):
+        p = tmp_path / "trace.csv"
+        p.write_text("# t,prompt,output\n1000,8,2\n\n2000,16,4\n")
+        reqs = trace_requests(str(p))
+        assert reqs == [Request(0, 1000.0, 8, 2), Request(1, 2000.0, 16, 4)]
+
+    def test_invalid_parameters_raise(self):
+        with pytest.raises(ValueError):
+            poisson_requests(4, 0.0)
+        with pytest.raises(ValueError):
+            bursty_requests(4, 10.0, burstiness=1.0)
+        with pytest.raises(ValueError):
+            poisson_requests(4, 10.0, prompt_mean=0)
+
+
+# ------------------------------------------------- batch-derived collectives
+class TestLiveBatchSizing:
+    def test_tp_activation_bytes_track_live_tokens(self):
+        pod = resolve_pod(PodSpec(n_gpus=16), TINY, "decode")
+        em = StepEmitter(TINY, pod)
+        em.step(0, 1)
+        em.step(1, 64)
+        ag0 = next(c for c in em.calls if c.step == 0
+                   and c.collective == "all_gather")
+        ag1 = next(c for c in em.calls if c.step == 1
+                   and c.collective == "all_gather")
+        assert ag1.nbytes == 64 * ag0.nbytes
+        assert ag0.nbytes == TINY.d_model * pod.dtype_bytes
+
+    def test_ep_dispatch_bytes_track_live_tokens(self):
+        pod = resolve_pod(PodSpec(n_gpus=16), TINY, "decode")
+        em = StepEmitter(TINY, pod)
+        em.step(0, 128)     # t_loc 8 -> capacity floor
+        em.step(1, 4096)    # t_loc 256 -> capacity 40
+        a2a = [c for c in em.calls if c.collective == "all_to_all"]
+        small = next(c.nbytes for c in a2a if c.step == 0)
+        large = next(c.nbytes for c in a2a if c.step == 1)
+        assert large > small
+
+    def test_buffers_stable_across_steps(self):
+        pod = resolve_pod(PodSpec(n_gpus=16), TINY, "decode")
+        em = StepEmitter(TINY, pod)
+        em.step(0, 3)
+        em.step(1, 17)
+        bufs0 = {c.buffer for c in em.calls if c.step == 0}
+        bufs1 = {c.buffer for c in em.calls if c.step == 1}
+        assert bufs0 == bufs1    # same pages -> steady steps stay warm
+
+
+# ------------------------------------------------------------- scheduling
+class TestContinuousBatching:
+    def test_slots_bound_and_conservation(self):
+        reqs = tiny_requests([0.0] * 7, prompt=16, output=4)
+        res = simulate_traffic(TINY, reqs, n_gpus=16, max_decode_slots=2,
+                               prefill_chunk_tokens=16)
+        assert all(s.decode_tokens <= 2 for s in res.steps)
+        assert len(res.finished) == 7
+        for r in res.requests:
+            # One TTFT sample plus output_tokens-1 inter-token samples.
+            assert r.tokens_out == r.req.output_tokens
+            assert len(r.itl_ns) == r.req.output_tokens - 1
+            assert r.ttft_ns is not None and r.ttft_ns > 0
+
+    def test_prefill_interleaves_with_decode(self):
+        reqs = tiny_requests([0.0, 1.0], prompt=64, output=8)
+        res = simulate_traffic(TINY, reqs, n_gpus=16,
+                               prefill_chunk_tokens=16)
+        assert any(s.decode_tokens and s.prefill_tokens for s in res.steps)
+
+    def test_chunked_prefill_spans_steps(self):
+        reqs = tiny_requests([0.0], prompt=100, output=1)
+        res = simulate_traffic(TINY, reqs, n_gpus=16,
+                               prefill_chunk_tokens=32)
+        pre = [s.prefill_tokens for s in res.steps if s.prefill_tokens]
+        assert pre == [32, 32, 32, 4]
+        assert len(res.finished) == 1
+
+    def test_steps_cap_leaves_requests_unfinished(self):
+        reqs = tiny_requests([0.0] * 4, prompt=16, output=50)
+        res = simulate_traffic(TINY, reqs, n_gpus=16, steps_cap=5)
+        assert res.steps_capped and len(res.steps) == 5
+        assert len(res.finished) < 4
+
+    def test_ideal_timeline_causal(self):
+        reqs = tiny_requests([0.0, 5e8, 1e9], prompt=16, output=2)
+        res = simulate_traffic(TINY, reqs, n_gpus=16)
+        for r in res.requests:
+            assert r.ideal_first_token_ns > r.req.arrival_ns
+            assert r.ttft_degradation >= 1.0 - 1e-9
+
+
+# --------------------------------------------------------- TLB interaction
+class TestRetentionContract:
+    def _run(self, retention):
+        cfg = SimConfig(fabric=pod_fabric(resolve_pod(
+            PodSpec(n_gpus=16), TINY, "decode")),
+            tlb_retention_ns=retention)
+        # Two widely separated single-request bursts; the 1s gap between
+        # them dwarfs any retention window under test.
+        reqs = tiny_requests([0.0, 1e9], prompt=16, output=3)
+        return simulate_traffic(TINY, reqs, n_gpus=16, cfg=cfg)
+
+    def test_idle_gap_beyond_retention_repays_cold_misses(self):
+        res = self._run(retention=100_000.0)
+        # First step of each burst pays the walks; the steps in between
+        # ride warm entries.
+        walks = [s.walks for s in res.steps]
+        burst2_first = next(i for i, s in enumerate(res.steps)
+                            if s.t_start >= 1e9)
+        assert walks[0] > 0
+        assert walks[burst2_first] == walks[0]   # full cold re-pay
+        assert all(w == 0 for w in walks[1:burst2_first])
+        # The split shows up per request: both requests saw cold comm.
+        assert all(r.cold_comm_ns > 0 for r in res.requests)
+
+    def test_no_retention_keeps_entries_across_gap(self):
+        res = self._run(retention=None)
+        burst2_first = next(i for i, s in enumerate(res.steps)
+                            if s.t_start >= 1e9)
+        assert res.steps[0].walks > 0
+        assert res.steps[burst2_first].walks == 0
+        second = res.requests[1]
+        assert second.cold_comm_ns == 0 and second.warm_comm_ns > 0
+
+    def test_cold_warm_split_partitions_comm(self):
+        res = self._run(retention=100_000.0)
+        # Only one request is ever active at a time here, so per-request
+        # attributions partition the total comm exactly.
+        total = sum(s.comm_ns for s in res.steps)
+        attributed = sum(r.cold_comm_ns + r.warm_comm_ns
+                         for r in res.requests)
+        assert attributed == pytest.approx(total)
+
+    def test_degradation_concentrates_after_flush(self):
+        res = self._run(retention=100_000.0)
+        cold = [s.degradation for s in res.steps if s.walks > 0]
+        warm = [s.degradation for s in res.steps if s.walks == 0]
+        assert min(cold) > max(warm)
+
+
+# ----------------------------------------------------------------- sweeps
+class TestSweepDeterminism:
+    def _points(self):
+        base = dict(arch=TINY, n_requests=6, steps_cap=24,
+                    prompt_mean=16, output_mean=3, retention_ns=100_000.0,
+                    max_decode_slots=4, prefill_chunk_tokens=32)
+        return [TrafficPoint(rps=200.0, arrival="poisson", seed=5, **base),
+                TrafficPoint(rps=200.0, arrival="bursty", seed=5,
+                             burst_size=3, **base)]
+
+    def test_serial_and_pool_bit_for_bit(self):
+        pts = self._points()
+        serial = sweep_traffic(pts, workers=0)
+        pooled = sweep_traffic(pts, workers=2)
+        for pt in pts:
+            a, b = serial[pt], pooled[pt]
+            # Arrival generation is bit-for-bit identical...
+            assert [r.req for r in a.requests] == [r.req for r in b.requests]
+            # ...and so is everything priced from it.
+            assert ([(s.t_start, s.t_end, s.comm_ns, s.ideal_comm_ns,
+                      s.walks) for s in a.steps]
+                    == [(s.t_start, s.t_end, s.comm_ns, s.ideal_comm_ns,
+                         s.walks) for s in b.steps])
+            assert a.ttft_percentiles() == b.ttft_percentiles()
+            assert a.itl_percentiles() == b.itl_percentiles()
+
+    def test_point_regenerates_identical_arrivals(self):
+        pt = self._points()[1]
+        assert pt.requests() == pt.requests()
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           rps=st.floats(0.5, 1000.0),
+           n=st.integers(1, 64),
+           arrival=st.sampled_from(["poisson", "bursty"]))
+    def test_property_arrival_generation_deterministic(seed, rps, n,
+                                                       arrival):
+        gen = (poisson_requests if arrival == "poisson"
+               else bursty_requests)
+        a, b = gen(n, rps, seed=seed), gen(n, rps, seed=seed)
+        assert a == b
+        assert all(x.arrival_ns <= y.arrival_ns for x, y in zip(a, a[1:]))
+        assert all(r.prompt_tokens >= 1 and r.output_tokens >= 1
+                   for r in a)
+
+
+# -------------------------------------------------------------------- CLI
+class TestCLI:
+    def test_cli_runs_offline_without_jax(self):
+        # The acceptance command, scaled down: must resolve the registry
+        # arch, simulate, and print the percentile summary with the
+        # cold-vs-warm split — all without jax ever being imported.
+        code = (
+            "import sys\n"
+            "from repro.serving.__main__ import main\n"
+            "rc = main(['--arch', 'granite-moe-1b-a400m', '--rps', '8',\n"
+            "           '--steps-cap', '8', '--requests', '2',\n"
+            "           '--prompt-mean', '8', '--output-mean', '2'])\n"
+            "assert rc == 0, rc\n"
+            "assert 'jax' not in sys.modules, 'CLI must stay jax-free'\n"
+        )
+        root = pathlib.Path(__file__).resolve().parent.parent
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=300,
+            env={**os.environ, "PYTHONPATH": str(root / "src")},
+            cwd=str(root))
+        assert out.returncode == 0, out.stderr
+        assert "metric,p50_us,p95_us,p99_us" in out.stdout
+        assert "ttft," in out.stdout and "inter_token," in out.stdout
+        assert "cold-vs-warm comm split" in out.stdout
+
+
+# ------------------------------------------------------------------ fig15
+@pytest.mark.slow
+def test_fig15_bursty_tail_exceeds_mean():
+    from benchmarks.paper_figs import fig15_serving_tail_latency
+    rows = {name: derived for name, _us, derived
+            in fig15_serving_tail_latency()}
+    assert "p99_exceeds_mean=True" in rows[
+        "fig15/check_bursty_tail_concentration"]
+    assert "claws_back=True" in rows[
+        "fig15/check_pretranslation_claws_back_tail"]

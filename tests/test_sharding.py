@@ -1,7 +1,7 @@
 """Unit tests for the logical-sharding machinery (no heavy compiles)."""
 import jax
 import jax.numpy as jnp
-import pytest
+
 from jax.sharding import PartitionSpec as P
 
 from repro.models.base import logical_to_pspec

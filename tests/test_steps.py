@@ -101,7 +101,6 @@ class TestServeSteps:
             srv, in_sh, _, (params_s, cache_s) = make_serve_step(
                 cfg, mesh, shape)
             # lowering compiles without allocation
-            import jax as _jax
             from repro.launch import specs as sp
             lowered = srv.lower(params_s, sp.token_specs(shape), cache_s)
             compiled = lowered.compile()

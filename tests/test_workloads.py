@@ -5,7 +5,6 @@ mix per shape kind, pod resolution), the page-aligned buffer layout, the
 replay trajectory (token 0 cold, steady state warm — the fig13 acceptance
 criterion), and the parallel-sweep executor equivalence.
 """
-import math
 
 import pytest
 
@@ -13,8 +12,8 @@ from repro.core import ratsim, paper_config, MB
 from repro.workloads import (PodSpec, buffer_layout, derive_workload,
                              moe_a2a_bytes, replay, resolve_pod)
 
-# A tiny in-repo MoE config: registry archs import jax (via models.base),
-# which these pure-simulator tests do not need.
+# A tiny in-repo MoE config: keeps these pure-simulator tests independent
+# of the real architecture registry.
 from repro.workloads.derive import CollectiveCall, WorkloadTrace
 
 
