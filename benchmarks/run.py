@@ -1,12 +1,15 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV.  ``--bench-engine`` instead times a fixed sweep grid through the
-# epoch engine and writes BENCH_engine.json (uploaded as a CI artifact so
-# the engine's performance trajectory is tracked PR over PR);
+# CSV.  ``--bench-engine`` instead times a fixed sweep grid through BOTH
+# simulation engines (event and vectorized, which must agree bit-for-bit —
+# the bench doubles as a coarse differential check), emits the per-point
+# speedup column, and writes BENCH_engine.json (uploaded as a CI artifact
+# so the engines' performance trajectory is tracked PR over PR);
 # ``--check-against benchmarks/BENCH_baseline.json`` turns that grid into a
-# regression gate: any point whose wall time exceeds the committed baseline
-# by more than ``--tolerance`` fails the run (use ``--update-baseline``
-# for intentional resets, ``--current`` to gate a pre-measured JSON
-# without re-running the grid).
+# regression gate: any point whose wall time (either engine) exceeds the
+# committed baseline by more than ``--tolerance`` fails the run, as does a
+# vectorized wall slower than the event wall on the same point (use
+# ``--update-baseline`` for intentional resets, ``--current`` to gate a
+# pre-measured JSON without re-running the grid).
 import argparse
 import json
 import sys
@@ -40,9 +43,11 @@ def figures() -> int:
 
 
 # Fixed micro-benchmark grid: (topology, n_gpus, nbytes).  Serial, one
-# simulate pair per point — wall times measure the engine itself, not the
-# sweep pool.  Includes the paper-scale 1 GB point and a two-tier 256-GPU
-# point so both the epoch expansion and the tier-shaping path are priced.
+# simulate pair per point per engine — wall times measure the engine
+# itself, not the sweep pool.  Includes the paper-scale 1 GB point (epoch
+# expansion), tier-shaped two-tier points, and the pod-scale 512/256-GPU
+# points where the O(n^2) flow-materialization cost that motivated the
+# vectorized engine dominates (ROADMAP: fig14-scale sweeps).
 def _bench_points():
     from repro.core import GB, MB
     return [
@@ -50,17 +55,21 @@ def _bench_points():
         ("single_clos", 64, 1 * GB),
         ("two_tier", 256, 16 * MB),
         ("two_tier", 256, 256 * MB),
+        ("two_tier", 512, 16 * MB),
         ("multi_pod", 64, 64 * MB),
+        ("multi_pod", 256, 64 * MB),
     ]
 
 
 def measure_engine(reps: int = 3) -> dict:
-    """Time the fixed grid; returns the BENCH_engine.json payload.
+    """Time the fixed grid on both engines; returns the JSON payload.
 
-    Each point is best-of-``reps``: the minimum wall time is the least
-    noise-contaminated estimate of the engine's cost, which is what a
+    Each point is best-of-``reps`` per engine: the minimum wall time is the
+    least noise-contaminated estimate of the engine's cost, which is what a
     cross-run regression gate must compare (means absorb scheduler noise
-    and flake the gate).
+    and flake the gate).  The two engines' results must agree exactly on
+    every point — a mismatch aborts the bench, so a published speedup can
+    never come from a divergent simulation.
     """
     from repro.core import ratsim
     from repro.core.config import FabricConfig, SimConfig
@@ -70,22 +79,49 @@ def measure_engine(reps: int = 3) -> dict:
     for topo, n, nbytes in _bench_points():
         fab = FabricConfig(n_gpus=n, topology=topo, leaf_size=16,
                            oversubscription=2.0, pod_size=16)
-        wall = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            c = ratsim.compare(nbytes, n, cfg=SimConfig(fabric=fab))
-            wall = min(wall, time.perf_counter() - t0)
+        walls = {}
+        results = {}
+        for eng in ("event", "vectorized"):
+            cfg = SimConfig(fabric=fab, engine=eng)
+            wall = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                c = ratsim.compare(nbytes, n, cfg=cfg)
+                wall = min(wall, time.perf_counter() - t0)
+            walls[eng] = wall
+            results[eng] = c
+        ce = results["event"].baseline
+        cv = results["vectorized"].baseline
+        if (ce.completion_ns != cv.completion_ns
+                or ce.counters.requests != cv.counters.requests
+                or ce.counters.walks != cv.counters.walks
+                or ce.counters.by_class != cv.counters.by_class):
+            raise AssertionError(
+                f"engine disagreement at {topo}/gpus{n}/{nbytes >> 20}MB: "
+                f"event {ce.completion_ns} vs vectorized {cv.completion_ns}")
+        c = results["event"]
+        speedup = walls["event"] / walls["vectorized"]
         points.append({
             "topology": topo, "n_gpus": n, "nbytes": nbytes,
-            "wall_s": round(wall, 4),
+            "wall_s": round(walls["event"], 4),
+            "wall_vec_s": round(walls["vectorized"], 4),
+            "speedup": round(speedup, 2),
             "completion_ns": c.baseline.completion_ns,
             "degradation": c.degradation,
             "requests": c.baseline.counters.requests,
         })
-        print(f"# {topo}/gpus{n}/{nbytes >> 20}MB: {wall:.3f}s "
-              f"(deg={c.degradation:.4f})", file=sys.stderr)
-    return {"grid": "engine-v1",
+        print(f"# {topo}/gpus{n}/{nbytes >> 20}MB: "
+              f"event {walls['event']:.3f}s, "
+              f"vec {walls['vectorized']:.3f}s ({speedup:.1f}x, "
+              f"deg={c.degradation:.4f})", file=sys.stderr)
+    tot_e = sum(p["wall_s"] for p in points)
+    tot_v = sum(p["wall_vec_s"] for p in points)
+    agg = tot_e / tot_v if tot_v else float("inf")
+    print(f"# aggregate speedup: {tot_e:.3f}s / {tot_v:.3f}s = {agg:.1f}x",
+          file=sys.stderr)
+    return {"grid": "engine-v2",
             "total_wall_s": round(time.perf_counter() - t_all, 4),
+            "speedup": round(agg, 2),
             "points": points}
 
 
@@ -100,41 +136,59 @@ def _point_name(key: tuple) -> str:
 
 def check_against(current: dict, baseline: dict, tolerance: float,
                   min_delta_s: float = 0.05) -> list:
-    """Per-point wall-time regression gate.
+    """Per-point wall-time regression gate, both engines.
 
     Returns the list of failure messages (empty = gate passes) and prints
     the full delta table either way, so CI logs always show the trajectory.
-    ``min_delta_s`` is an absolute floor: a point only fails when it is
-    both ``tolerance`` slower *and* at least that many seconds slower —
-    millisecond points jitter past any relative tolerance.  A grid
-    mismatch (missing or extra points, e.g. a stale committed baseline
-    after the grid changed) also fails — reset intentionally with
+    Per grid point it gates
+
+    * the event wall (``wall_s``) and — when both sides carry it — the
+      vectorized wall (``wall_vec_s``) against the committed baseline;
+    * the vectorized wall against the event wall *of the same run*: a
+      vectorized engine slower than the event engine defeats its purpose
+      and fails regardless of what the baseline says.
+
+    ``min_delta_s`` is an absolute floor on every rule: a point only fails
+    when it is both ``tolerance`` slower *and* at least that many seconds
+    slower — millisecond points jitter past any relative tolerance.  A
+    grid mismatch (missing or extra points, e.g. a stale committed
+    baseline after the grid changed) also fails — reset intentionally with
     ``--update-baseline``.
     """
     base = {_point_key(p): p for p in baseline.get("points", [])}
     cur = {_point_key(p): p for p in current.get("points", [])}
     failures = []
     print(f"# bench gate: wall-time tolerance +{tolerance:.0%} per point")
-    print(f"{'point':<28s} {'base_s':>8s} {'cur_s':>8s} {'delta':>8s}")
+    print(f"{'point':<34s} {'base_s':>8s} {'cur_s':>8s} {'delta':>8s}")
     for key, cp in cur.items():
         bp = base.get(key)
         if bp is None:
-            print(f"{_point_name(key):<28s} {'-':>8s} "
+            print(f"{_point_name(key):<34s} {'-':>8s} "
                   f"{cp['wall_s']:>8.3f} {'new':>8s}")
             failures.append(f"{_point_name(key)}: not in baseline "
                             f"(grid changed? --update-baseline)")
             continue
-        delta = (cp["wall_s"] - bp["wall_s"]) / bp["wall_s"] \
-            if bp["wall_s"] else float("inf")
-        regressed = (delta > tolerance
-                     and cp["wall_s"] - bp["wall_s"] > min_delta_s)
-        flag = " REGRESSED" if regressed else ""
-        print(f"{_point_name(key):<28s} {bp['wall_s']:>8.3f} "
-              f"{cp['wall_s']:>8.3f} {delta:>+7.1%}{flag}")
-        if regressed:
+        for field, tag in (("wall_s", ""), ("wall_vec_s", " [vec]")):
+            if field not in cp or field not in bp:
+                continue
+            name = _point_name(key) + tag
+            delta = (cp[field] - bp[field]) / bp[field] \
+                if bp[field] else float("inf")
+            regressed = (delta > tolerance
+                         and cp[field] - bp[field] > min_delta_s)
+            flag = " REGRESSED" if regressed else ""
+            print(f"{name:<34s} {bp[field]:>8.3f} "
+                  f"{cp[field]:>8.3f} {delta:>+7.1%}{flag}")
+            if regressed:
+                failures.append(
+                    f"{name}: {bp[field]:.3f}s -> "
+                    f"{cp[field]:.3f}s ({delta:+.1%} > +{tolerance:.0%})")
+        if ("wall_vec_s" in cp
+                and cp["wall_vec_s"] > cp["wall_s"]
+                and cp["wall_vec_s"] - cp["wall_s"] > min_delta_s):
             failures.append(
-                f"{_point_name(key)}: {bp['wall_s']:.3f}s -> "
-                f"{cp['wall_s']:.3f}s ({delta:+.1%} > +{tolerance:.0%})")
+                f"{_point_name(key)}: vectorized ({cp['wall_vec_s']:.3f}s) "
+                f"slower than event ({cp['wall_s']:.3f}s)")
     for key in base:
         if key not in cur:
             failures.append(f"{_point_name(key)}: in baseline but not "

@@ -1,0 +1,636 @@
+"""Vectorized batch engine: the page-epoch model as array arithmetic.
+
+Drop-in replacement for :class:`repro.core.engine.EpochEngine` selected via
+``SimConfig.engine="vectorized"`` (DESIGN.md §12).  The event engine spends
+its time in two places: materializing O(n^2) per-flow Python objects at
+pod scale, and walking a Python loop over every (epoch, station) head of
+large collectives.  This engine removes both:
+
+* flow/epoch/head geometry — spacing, arrival times, page spans, station
+  striping, ingress totals — is precomputed as numpy arrays
+  (:func:`flows_from_specs` plus the span construction in
+  :meth:`VecEngine.run_iteration`);
+* only the inherently sequential part remains a Python loop: one
+  :meth:`VecTranslationState.access` state-machine call per epoch head (the
+  TLB hierarchy is stateful — each access's outcome depends on every prior
+  access), reading pre-converted native scalars;
+* all per-head tail expansion (hit-under-miss counts, latency sums, trace
+  rows, completion) is deferred to vectorized postprocessing.
+
+Bit-for-bit equivalence with the event engine is a hard contract, enforced
+by ``tests/test_engine_diff.py``.  It holds because every float expression
+keeps the event engine's exact operand order (elementwise numpy float64 ops
+are IEEE-identical to scalar Python), accumulations use ``np.cumsum`` (a
+strict left fold, matching the scalar ``+=`` chain — the terms the event
+engine skips contribute exact-zero no-ops), and the optimized LRU below
+reproduces the original's lazy-commit order exactly.
+
+:class:`VecTranslationState` is an operation-for-operation port of
+:class:`repro.core.tlb.TranslationState` with two structural speedups that
+provably preserve the observable sequence of cache operations:
+
+* ``_VLRU`` commits staged fills from a min-heap ordered by
+  ``(fill_time, staging_index)`` instead of re-scanning and stably sorting
+  the staged dict on every lookup.  The original's order is fill-time with
+  dict-insertion tie-break, and dict position is preserved when a fill is
+  re-staged earlier — exactly the ``(fill_time, first_staging_index)``
+  order the heap pops in (stale heap entries are skipped by generation
+  check).
+* ``l1_maybe``/``l2_maybe`` record every page ever fill-staged per cache
+  since the last flush.  A page absent from the set cannot be resident, so
+  its lookup is a guaranteed miss and is skipped entirely.  Deferring the
+  skipped lookup's lazy commits is safe: commits are totally ordered by
+  ``(fill_time, staging_index)`` and every *taken* lookup first commits all
+  fills up to its own time, so the interleaving of commits, hits
+  (recency updates) and evictions that the caches observe is unchanged.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .config import SimConfig, TranslationConfig
+from .patterns import StepArrays
+from .tlb import CLASSES, Counters, INF, L1_HIT, L1_HUM, PTWPool
+from .topology import get_topology
+
+# Integer class codes for the hot path (postprocessing maps them back to
+# the string keys of Counters.by_class).  Order matches tlb.CLASSES.
+_L1_HIT, _L1_HUM, _L2_HIT, _L2_HUM, _WALK = range(5)
+
+
+class _VLRU:
+    """Set-associative lazy-commit LRU, heap-committed.
+
+    Same observable semantics as :class:`repro.core.tlb.LRUCache` (see the
+    module docstring for the order argument); O(log staged) per commit
+    instead of an O(staged) scan-and-sort per lookup.
+    """
+
+    __slots__ = ("entries", "assoc", "n_sets", "_sets", "_staged", "_heap",
+                 "_seq")
+
+    def __init__(self, entries: int, assoc: int):
+        self.entries = entries
+        self.assoc = assoc if assoc > 0 else entries
+        self.n_sets = max(1, entries // self.assoc)
+        self._sets = [OrderedDict() for _ in range(self.n_sets)]
+        self._staged: Dict[object, Tuple[float, int]] = {}
+        self._heap: List[Tuple[float, int, object]] = []
+        self._seq = 0
+
+    def _commit(self, t: float) -> None:
+        h = self._heap
+        staged = self._staged
+        sets = self._sets
+        n_sets = self.n_sets
+        assoc = self.assoc
+        while h and h[0][0] <= t:
+            ft, seq, k = heapq.heappop(h)
+            if staged.get(k) != (ft, seq):
+                continue                   # superseded by an earlier re-fill
+            del staged[k]
+            s = sets[hash(k) % n_sets]
+            if k in s:
+                s.move_to_end(k)
+            else:
+                if len(s) >= assoc:
+                    s.popitem(last=False)  # LRU eviction
+                s[k] = ft
+
+    def lookup(self, key, t: float) -> bool:
+        h = self._heap
+        if h and h[0][0] <= t:
+            self._commit(t)
+        s = self._sets[hash(key) % self.n_sets]
+        if key in s:
+            s.move_to_end(key)
+            return True
+        return False
+
+    def fill(self, key, fill_time: float) -> None:
+        prev = self._staged.get(key)
+        if prev is None:
+            seq = self._seq
+            self._seq = seq + 1
+            self._staged[key] = (fill_time, seq)
+            heapq.heappush(self._heap, (fill_time, seq, key))
+        elif fill_time < prev[0]:
+            # Earlier re-fill keeps the original staging index, exactly as
+            # a dict value update keeps the key's position.
+            self._staged[key] = (fill_time, prev[1])
+            heapq.heappush(self._heap, (fill_time, prev[1], key))
+
+
+class VecTranslationState:
+    """Optimized port of :class:`repro.core.tlb.TranslationState`.
+
+    Identical decision tree and float arithmetic; hot-path accesses return a
+    plain ``(resolve, class_code, l1_fill)`` tuple instead of an
+    ``AccessResult``.  Interface used by :class:`~repro.core.session.
+    SimSession` (``counters``, ``flush``) is preserved.
+    """
+
+    def __init__(self, cfg: TranslationConfig, n_stations: int):
+        self.cfg = cfg
+        self.n_stations = n_stations
+        self._l1_lat = cfg.l1.hit_latency_ns
+        self._l2_lat = cfg.l2.hit_latency_ns
+        self.l1 = [_VLRU(cfg.l1.entries, cfg.l1.assoc)
+                   for _ in range(n_stations)]
+        self.l2 = _VLRU(cfg.l2.entries, cfg.l2.assoc)
+        self.pwc = [_VLRU(e, cfg.pwc.assoc) for e in cfg.pwc.entries]
+        self.ptw = PTWPool(cfg.n_ptw)
+        self.l2_pending: Dict[int, float] = {}
+        # MSHR fills keyed (station, page) in the original; split per
+        # station here (same key space, no tuple hashing on the hot path).
+        self.l1_pending: List[Dict[int, float]] = [
+            {} for _ in range(n_stations)]
+        self.counters = Counters()
+        # Pages ever fill-staged per cache since the last flush: absence
+        # proves a miss, so the lookup (and its deferred-safe lazy commit)
+        # is skipped.
+        self.l1_maybe = [set() for _ in range(n_stations)]
+        self.l2_maybe: set = set()
+
+    def flush(self) -> None:
+        """Invalidate cached translations; keep counters and PTW occupancy
+        (mirrors :meth:`repro.core.tlb.TranslationState.flush`)."""
+        cfg = self.cfg
+        self.l1 = [_VLRU(cfg.l1.entries, cfg.l1.assoc)
+                   for _ in range(self.n_stations)]
+        self.l2 = _VLRU(cfg.l2.entries, cfg.l2.assoc)
+        self.pwc = [_VLRU(e, cfg.pwc.assoc) for e in cfg.pwc.entries]
+        self.l2_pending.clear()
+        self.l1_pending = [{} for _ in range(self.n_stations)]
+        self.l1_maybe = [set() for _ in range(self.n_stations)]
+        self.l2_maybe = set()
+
+    def _walk_latency(self, page: int, t: float) -> float:
+        c = self.cfg
+        ctr = self.counters
+        lat = 0.0
+        addr = page * c.page_bytes
+        for lvl, cache in enumerate(self.pwc):
+            region = addr // c.pwc.coverage_bytes[lvl]
+            lat += c.pwc.lookup_latency_ns
+            if cache.lookup((lvl, region), t + lat):
+                ctr.pwc_hits += 1
+            else:
+                ctr.pwc_misses += 1
+                lat += c.mem_access_ns
+                ctr.walk_mem_reads += 1
+                cache.fill((lvl, region), t + lat)
+        lat += c.mem_access_ns
+        ctr.walk_mem_reads += 1
+        return lat
+
+    def access(self, station: int, page: int,
+               t: float) -> Tuple[float, int, float]:
+        """One translation request; callers gate on ``cfg.enabled``."""
+        t1 = t + self._l1_lat
+        maybe = self.l1_maybe[station]
+        if page in maybe and self.l1[station].lookup(page, t1):
+            return (t1, _L1_HIT, -INF)
+
+        pending = self.l1_pending[station]
+        pend = pending.get(page)
+        if pend is not None:
+            if pend <= t1:
+                del pending[page]
+                return (t1, _L1_HUM, pend)       # max(t1, pend) == t1
+            return (pend, _L1_HUM, pend)         # max(t1, pend) == pend
+
+        t2 = t1 + self._l2_lat
+        if page in self.l2_maybe and self.l2.lookup(page, t2):
+            self.l1[station].fill(page, t2)
+            maybe.add(page)
+            pending[page] = t2
+            return (t2, _L2_HIT, t2)
+
+        walk_done = self.l2_pending.get(page)
+        if walk_done is not None:
+            if walk_done > t2:
+                self.l1[station].fill(page, walk_done)
+                maybe.add(page)
+                pending[page] = walk_done
+                return (walk_done, _L2_HUM, walk_done)
+            del self.l2_pending[page]
+
+        start = self.ptw.start(t2)
+        walk_lat = self._walk_latency(page, start)
+        self.ptw.finish(start + walk_lat)
+        done = start + walk_lat
+        self.counters.walks += 1
+        self.l2_pending[page] = done
+        self.l2.fill(page, done)
+        self.l2_maybe.add(page)
+        self.l1[station].fill(page, done)
+        maybe.add(page)
+        pending[page] = done
+        return (done, _WALK, done)
+
+
+@dataclass
+class FlowArrays:
+    """One step's flows at one target as parallel columns.
+
+    Row ``i`` carries exactly the fields of the ``i``-th
+    :class:`~repro.core.engine.Flow` that :func:`~repro.core.engine.
+    flows_for_dst` would build (same order: spec order filtered to this
+    target).
+    """
+
+    src: np.ndarray        # int64
+    base_addr: np.ndarray  # int64, NPA region base + spec offset
+    nbytes: np.ndarray     # int64, all > 0
+    t_start: float
+    delta: np.ndarray      # float64 inter-request spacing
+    stripe: np.ndarray     # int64 station striping offset
+    oneway: np.ndarray     # float64 request-path latency
+    ret: np.ndarray        # float64 ack-path latency
+
+    def __len__(self) -> int:
+        return len(self.src)
+
+
+def flows_from_specs(step: StepArrays, cfg: SimConfig, dst: int,
+                     t_start: float) -> Optional[FlowArrays]:
+    """Vectorized :func:`repro.core.engine.flows_for_dst`.
+
+    Bandwidth shares count *all* of the step's flows (zero-byte and
+    other-target flows included), matching the event engine; only flows
+    landing at ``dst`` with positive bytes are materialized.  Returns
+    ``None`` for an empty flow set (the event path's ``[]``).
+    """
+    fab = cfg.fabric
+    topo = get_topology(fab)
+    sel = (step.dst == dst) & (step.nbytes > 0)
+    if not sel.any():
+        return None
+    src = step.src[sel]
+    nb = step.nbytes[sel]
+    off = step.offset[sel]
+    rb = fab.request_bytes
+    delta = (rb * step.out_deg()[src]) / fab.gpu_bw
+    if topo.flat:
+        oneway = np.full(len(src), fab.oneway_ns)
+        ret = np.full(len(src), fab.return_ns)
+    else:
+        # Per-(source, tier) degrees are a per-step aggregate over ALL
+        # specs; cached on the StepArrays (steps are built per run, under
+        # one fabric config, so the cache never crosses topologies).
+        if step._tier_cache is None:
+            tier_all = topo.tier_arr(step.src, step.dst)
+            ntier = int(tier_all.max()) + 1 if len(tier_all) else 1
+            step._tier_cache = (ntier,
+                                np.bincount(step.src * ntier + tier_all))
+        ntier, tdeg = step._tier_cache
+        tier_sel = topo.tier_arr(src, dst)
+        for tv in np.unique(tier_sel):
+            cap = topo.tier_capacity(int(tv))
+            if cap is None:
+                continue
+            m = tier_sel == tv
+            shaped = (rb * tdeg[src[m] * ntier + tv]) / cap
+            delta[m] = np.maximum(delta[m], shaped)
+        oneway = topo.path_latency_arr(src, dst)
+        ret = topo.return_latency_arr(dst, src)
+    return FlowArrays(src=src, base_addr=((dst + 1) << 42) + off, nbytes=nb,
+                      t_start=t_start, delta=delta,
+                      stripe=src % fab.stations_per_gpu,
+                      oneway=oneway, ret=ret)
+
+
+def request_counts(fa: FlowArrays, rb: int) -> List[int]:
+    """Per-flow request counts (``max(1, ceil(nbytes / rb))``, exact)."""
+    return np.maximum(1, np.ceil(fa.nbytes / rb).astype(np.int64)).tolist()
+
+
+class VecEngine:
+    """Vectorized twin of :class:`repro.core.engine.EpochEngine`.
+
+    Same construction signature and the same surface
+    :class:`~repro.core.session.SimSession` drives (``state``,
+    ``stall_sum``/``stall_n``, ``trace_chunks``, ``run_iteration``), but
+    ``run_iteration`` consumes a :class:`FlowArrays` instead of a
+    ``List[Flow]``.
+    """
+
+    def __init__(self, cfg: SimConfig, dst: int = 0):
+        self.cfg = cfg
+        self.dst = dst
+        fab = cfg.fabric
+        self.state = VecTranslationState(cfg.translation,
+                                         fab.stations_per_gpu)
+        self.page_bytes = cfg.translation.page_bytes
+        self.svc = fab.request_bytes / fab.station_bw
+        self.buffer_cover = fab.ingress_entries * self.svc
+        self.trace_chunks: List[Tuple[int, int, np.ndarray]] = []
+        self.stall_sum = 0.0
+        self.stall_n = 0
+
+    # -- optimizations -------------------------------------------------------
+    def _pretranslate(self, fa: FlowArrays) -> None:
+        """Vectorized probe construction; sequential replay in issue order
+        (same (t, station, page) stream as ``pretranslate_probes``)."""
+        pre = self.cfg.pretranslation
+        fab = self.cfg.fabric
+        ns = fab.stations_per_gpu
+        rb = fab.request_bytes
+        pb = self.page_bytes
+        base = fa.base_addr
+        first_page = base // pb
+        n_pages = (base + fa.nbytes - 1) // pb - first_page + 1
+        ppf = pre.pages_per_flow
+        limit = n_pages if ppf <= 0 else np.minimum(n_pages, ppf)
+        total = int(limit.sum())
+        if not total:
+            return
+        pf = np.repeat(np.arange(len(fa)), limit)
+        cum = np.concatenate(([0], np.cumsum(limit)))
+        j = np.arange(total) - cum[:-1][pf]
+        pg = first_page[pf] + j
+        b = base[pf]
+        st = ((np.maximum(b, pg * pb) - b) // rb + fa.stripe[pf]) % ns
+        t0 = fa.t_start - pre.lead_time_ns
+        times = t0 + np.arange(total) * pre.probe_issue_interval_ns
+        access = self.state.access
+        for s, p, t in zip(st.tolist(), pg.tolist(), times.tolist()):
+            access(s, p, t)
+        self.state.counters.probes += total
+
+    # -- core ----------------------------------------------------------------
+    def run_iteration(self, fa: FlowArrays, collect_trace: bool,
+                      fi_base: int = 0, first_step: bool = True) -> float:
+        """Price one step's flow set; returns absolute completion time.
+
+        Semantics identical to ``EpochEngine.run_iteration``: translation
+        state persists across calls, per-station ingress bookkeeping
+        resets, pre-translation probes fire only on ``first_step``.
+        """
+        cfg = self.cfg
+        fab = cfg.fabric
+        rb = fab.request_bytes
+        ns = fab.stations_per_gpu
+        pb = self.page_bytes
+        enabled = cfg.translation.enabled
+        l1_lat = cfg.translation.l1.hit_latency_ns if enabled else 0.0
+        ctr = self.state.counters
+
+        base = fa.base_addr
+        nb = fa.nbytes
+        delta = fa.delta
+        stripe = fa.stripe
+        n_req = np.maximum(1, np.ceil(nb / rb).astype(np.int64))
+        a0 = fa.t_start + fa.oneway
+
+        if cfg.pretranslation.enabled and enabled and first_step and len(fa):
+            self._pretranslate(fa)
+
+        # ---- epoch spans: vectorized epoch_spans(), same sort order ------
+        first_page = base // pb
+        last_page = (base + nb - 1) // pb
+        npages = last_page - first_page + 1
+        cum = np.concatenate(([0], np.cumsum(npages)))
+        e_fi = np.repeat(np.arange(len(fa)), npages)
+        page = first_page[e_fi] + (np.arange(int(cum[-1])) - cum[:-1][e_fi])
+        b_f = base[e_fi]
+        lo = np.maximum(b_f, page * pb)
+        hi = np.minimum(b_f + nb[e_fi], (page + 1) * pb)
+        i0 = (lo - b_f) // rb
+        i1 = np.minimum(n_req[e_fi],
+                        np.ceil((hi - b_f) / rb).astype(np.int64))
+        keep = i1 > i0
+        e_fi, page, i0, i1 = e_fi[keep], page[keep], i0[keep], i1[keep]
+        t_first = a0[e_fi] + i0 * delta[e_fi]
+        # Tuple sort (t_first, fi, page): (fi, page) pairs are unique, so
+        # the lexsort total order equals the event engine's list.sort().
+        order = np.lexsort((page, e_fi, t_first))
+        e_fi, page, i0, i1, t_first = (
+            e_fi[order], page[order], i0[order], i1[order], t_first[order])
+        E = len(e_fi)
+
+        # ---- heads: per-(epoch, station) sub-series geometry -------------
+        e_nh = np.minimum(ns, i1 - i0)
+        hcum = np.concatenate(([0], np.cumsum(e_nh)))
+        H = int(hcum[-1])
+        h_e = np.repeat(np.arange(E), e_nh)
+        h_is0 = i0[h_e] + (np.arange(H) - hcum[:-1][h_e])
+        h_fi = e_fi[h_e]
+        h_st = (h_is0 + stripe[h_fi]) % ns
+        h_ns = (i1[h_e] - h_is0 + ns - 1) // ns
+        h_t0b = a0[h_fi] + h_is0 * delta[h_fi]   # head arrival before skew
+        h_stride = ns * delta[h_fi]
+        h_ret = fa.ret[h_fi]
+
+        if not enabled:
+            # Ideal translation: every request resolves instantly; no
+            # sequential state at all.  resolve == t0, rat == 0, no stalls.
+            n_tot = int(h_ns.sum())
+            ctr.requests += n_tot
+            ctr.by_class[L1_HIT] += n_tot
+            tail = h_ns > 1
+            last = h_t0b.copy()
+            last[tail] = np.maximum(
+                last[tail],
+                h_t0b[tail] + (h_ns[tail] - 1) * h_stride[tail] + l1_lat)
+            completion = float((last + fab.hbm_ns + h_ret).max()) if H else 0.0
+            if completion < 0.0:
+                completion = 0.0
+            if collect_trace:
+                self._write_trace(fi_base, e_fi, i0, i1, hcum, h_is0, h_ns,
+                                  h_t0b, np.zeros(H), np.full(H, -INF),
+                                  h_stride, ns, l1_lat)
+            return completion
+
+        # ---- prefetch probe targets (paper §6.2), per epoch --------------
+        pf_cols = []
+        if cfg.prefetch.enabled:
+            b_e = base[e_fi]
+            lp_e = last_page[e_fi]
+            stripe_e = stripe[e_fi]
+            for j in range(1, cfg.prefetch.depth + 1):
+                pj = page + j
+                valid = pj <= lp_e
+                st_j = ((np.maximum(b_e, pj * pb) - b_e) // rb
+                        + stripe_e) % ns
+                pf_cols.append((valid.tolist(), st_j.tolist(), pj.tolist()))
+
+        # ---- per-station ingress totals ----------------------------------
+        totals = np.zeros(ns, dtype=np.int64)
+        bq, extra = np.divmod(n_req, ns)
+        soff = np.arange(ns)
+        np.add.at(totals, (soff[None, :] + stripe[:, None]) % ns,
+                  bq[:, None] + (soff[None, :] < extra[:, None]))
+
+        # ---- sequential core: one state-machine access per head ----------
+        access = self.state.access
+        skew = [0.0] * ns
+        release = [-INF] * ns
+        consumed = [0] * ns
+        totals_l = totals.tolist()
+        ingress = fab.ingress_entries
+        cover = self.buffer_cover
+        stall_sum = self.stall_sum
+        stall_n = self.stall_n
+        st_l = h_st.tolist()
+        t0b_l = h_t0b.tolist()
+        ns_l = h_ns.tolist()
+        hpage_l = page[h_e].tolist()
+        # Heads run strictly in flat order (epoch-sorted, station sub-order
+        # inside each epoch), so per-head outputs are append-only.
+        res_l: List[float] = []
+        fill_l: List[float] = []
+        t0_l: List[float] = []
+        cls_l: List[int] = []
+        res_app, fill_app = res_l.append, fill_l.append
+        t0_app, cls_app = t0_l.append, cls_l.append
+        probes = 0
+        if pf_cols:
+            # Epoch-structured walk: each epoch's prefetch probes fire at
+            # its first arrival, before its heads.
+            h0_l = hcum[:-1].tolist()
+            h1_l = hcum[1:].tolist()
+            tf_l = t_first.tolist()
+            for e in range(E):
+                tf = tf_l[e]
+                for (valid, stj, pj) in pf_cols:
+                    if valid[e]:
+                        access(stj[e], pj[e], tf)
+                        probes += 1
+                for h in range(h0_l[e], h1_l[e]):
+                    s = st_l[h]
+                    t0 = t0b_l[h] + skew[s]
+                    resolve, kls, fill = access(s, hpage_l[h], t0)
+                    res_app(resolve)
+                    fill_app(fill)
+                    t0_app(t0)
+                    cls_app(kls)
+                    # Ingress-buffer backpressure (same predicate
+                    # expressions as the event engine, term for term).
+                    if (resolve - (t0 + l1_lat) > 0
+                            and totals_l[s] - consumed[s] >= ingress):
+                        block_from = t0 + cover
+                        r = release[s]
+                        if r > block_from:
+                            block_from = r
+                        if resolve > block_from:
+                            bubble = resolve - block_from
+                            skew[s] += bubble
+                            release[s] = resolve
+                            stall_sum += bubble
+                            stall_n += 1
+                    consumed[s] += ns_l[h]
+        else:
+            for s, pg, t0b, nsh in zip(st_l, hpage_l, t0b_l, ns_l):
+                t0 = t0b + skew[s]
+                resolve, kls, fill = access(s, pg, t0)
+                res_app(resolve)
+                fill_app(fill)
+                t0_app(t0)
+                cls_app(kls)
+                if (resolve - (t0 + l1_lat) > 0
+                        and totals_l[s] - consumed[s] >= ingress):
+                    block_from = t0 + cover
+                    r = release[s]
+                    if r > block_from:
+                        block_from = r
+                    if resolve > block_from:
+                        bubble = resolve - block_from
+                        skew[s] += bubble
+                        release[s] = resolve
+                        stall_sum += bubble
+                        stall_n += 1
+                consumed[s] += nsh
+        self.stall_sum = stall_sum
+        self.stall_n = stall_n
+        if probes:
+            ctr.probes += probes
+
+        # ---- deferred vectorized tail expansion --------------------------
+        res = np.asarray(res_l)
+        fill = np.asarray(fill_l)
+        t0 = np.asarray(t0_l)
+        rat0 = res - t0
+        tail = h_ns > 1
+        finite = fill > -INF
+        fill_safe = np.where(finite, fill, 0.0)
+        # k_hum = max(0, min(n_s - 1, ceil((fill - l1_lat - t0)/stride) - 1))
+        # computed in float (exact: the clamp bounds are far below 2^53).
+        kf = np.ceil((fill_safe - l1_lat - t0) / h_stride) - 1.0
+        kf = np.maximum(np.minimum(kf, (h_ns - 1).astype(np.float64)), 0.0)
+        k_hum = np.where(tail & finite, kf, 0.0).astype(np.int64)
+        hum = k_hum * (fill_safe - t0) - h_stride * k_hum * (k_hum + 1) / 2
+        hum = np.where(k_hum > 0, hum, 0.0)
+        n_hit = np.where(tail, h_ns - 1 - k_hum, 0)
+        hits = n_hit * l1_lat
+
+        s_hum = int(k_hum.sum())
+        s_hit = int(n_hit.sum())
+        kcnt = np.bincount(np.asarray(cls_l, dtype=np.int64), minlength=5)
+        ctr.requests += H + s_hum + s_hit
+        by = ctr.by_class
+        for idx, name in enumerate(CLASSES):
+            if kcnt[idx]:
+                by[name] += int(kcnt[idx])
+        by[L1_HUM] += s_hum
+        by[L1_HIT] += s_hit
+
+        # rat_ns_sum: strict left fold over [rat0, hum, hits] per head, in
+        # head order, seeded with the running value — cumsum is sequential,
+        # and the zero terms the event engine skips are exact no-ops.
+        contrib = np.empty(3 * H + 1)
+        contrib[0] = ctr.rat_ns_sum
+        contrib[1::3] = rat0
+        contrib[2::3] = hum
+        contrib[3::3] = hits
+        ctr.rat_ns_sum = float(np.cumsum(contrib)[-1])
+
+        if H:
+            m = max(ctr.rat_ns_max, float(rat0.max()))
+            hmax = float(np.where(k_hum > 0,
+                                  fill_safe - (t0 + h_stride), -INF).max())
+            if hmax > m:
+                m = hmax
+            ctr.rat_ns_max = m
+
+        last = res.copy()
+        khm = k_hum > 0
+        last[khm] = np.maximum(last[khm], fill[khm])
+        nhm = n_hit > 0
+        last[nhm] = np.maximum(
+            last[nhm],
+            t0[nhm] + (h_ns[nhm] - 1) * h_stride[nhm] + l1_lat)
+        completion = float((last + fab.hbm_ns + h_ret).max()) if H else 0.0
+        if completion < 0.0:
+            completion = 0.0
+
+        if collect_trace:
+            self._write_trace(fi_base, e_fi, i0, i1, hcum, h_is0, h_ns,
+                              t0, rat0, fill, h_stride, ns, l1_lat,
+                              res=None)
+        return completion
+
+    # -- tracing -------------------------------------------------------------
+    def _write_trace(self, fi_base, e_fi, i0, i1, hcum, h_is0, h_ns, t0,
+                     rat0, fill, h_stride, ns, l1_lat, res=None) -> None:
+        """Per-epoch trace rows, same expressions as the event engine."""
+        for e in range(len(e_fi)):
+            tr = np.empty(int(i1[e] - i0[e]))
+            for h in range(int(hcum[e]), int(hcum[e + 1])):
+                pos = int(h_is0[h] - i0[e])
+                tr[pos] = rat0[h]
+                nsh = int(h_ns[h])
+                if nsh > 1:
+                    ks = np.arange(1, nsh)
+                    arr = t0[h] + ks * h_stride[h]
+                    f = fill[h]
+                    lat = np.maximum(arr + l1_lat,
+                                     f if f > -INF else 0.0) - arr
+                    tr[pos + ks * ns] = np.maximum(lat, l1_lat)
+            self.trace_chunks.append((fi_base + int(e_fi[e]), int(i0[e]), tr))

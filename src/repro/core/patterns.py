@@ -33,8 +33,10 @@ emit identical flow sets, and "AllReduce" costs are pure communication time
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Type
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Type
+
+import numpy as np
 
 from .config import FabricConfig
 from .topology import get_topology
@@ -54,6 +56,48 @@ class FlowSpec:
     offset: int
 
 
+@dataclass
+class StepArrays:
+    """One collective step as parallel columns (vectorized engine form).
+
+    Row ``i`` is exactly ``steps()[k][i]`` — same flows, same order — so the
+    event engine and the vectorized engine consume the *same* schedule, just
+    materialized as arrays instead of per-flow objects.  ``out_deg``/
+    ``tier_deg`` are lazily cached per-step aggregates (they depend only on
+    the step, not on the simulated target).
+    """
+
+    src: np.ndarray       # int64
+    dst: np.ndarray       # int64
+    nbytes: np.ndarray    # int64
+    offset: np.ndarray    # int64
+    _out_deg: Optional[np.ndarray] = field(default=None, repr=False)
+    _tier_cache: Optional[tuple] = field(default=None, repr=False)
+
+    @classmethod
+    def from_specs(cls, step: List[FlowSpec]) -> "StepArrays":
+        n = len(step)
+        return cls(
+            src=np.fromiter((s.src for s in step), np.int64, n),
+            dst=np.fromiter((s.dst for s in step), np.int64, n),
+            nbytes=np.fromiter((s.nbytes for s in step), np.int64, n),
+            offset=np.fromiter((s.offset for s in step), np.int64, n))
+
+    def with_stride(self, stride: int) -> "StepArrays":
+        """Logical ranks placed on strided pod GPUs (resolve_collective)."""
+        return StepArrays(src=self.src * stride, dst=self.dst * stride,
+                          nbytes=self.nbytes, offset=self.offset)
+
+    def out_deg(self) -> np.ndarray:
+        """Per-source concurrent-flow count of this step (ALL flows — the
+        event engine counts zero-byte flows toward the bandwidth split)."""
+        if self._out_deg is None:
+            self._out_deg = np.bincount(
+                self.src, minlength=int(self.src.max()) + 1 if len(self.src)
+                else 1)
+        return self._out_deg
+
+
 class CollectivePattern:
     """Base class: a collective algorithm as per-step flow sets."""
 
@@ -63,6 +107,17 @@ class CollectivePattern:
     def steps(self, nbytes: int, fab: FabricConfig) -> List[List[FlowSpec]]:
         """Flow sets of each dependency step, in execution order."""
         raise NotImplementedError
+
+    def steps_arrays(self, nbytes: int,
+                     fab: FabricConfig) -> List[StepArrays]:
+        """The same schedule as :meth:`steps`, as :class:`StepArrays`.
+
+        The base fallback converts the object form row-for-row (exact for
+        every pattern); hot patterns override with native array
+        construction that never materializes per-flow objects.
+        """
+        return [StepArrays.from_specs(step)
+                for step in self.steps(nbytes, fab)]
 
     def total_bytes(self, nbytes: int, fab: FabricConfig) -> int:
         """Total bytes crossing the fabric (all steps, all pairs)."""
@@ -89,6 +144,22 @@ class AllToAll(CollectivePattern):
         step = [FlowSpec(src=src, dst=dst, nbytes=chunk, offset=src * chunk)
                 for dst in range(n) for src in range(n) if src != dst]
         return [step]
+
+    def steps_arrays(self, nbytes, fab):
+        # Native array construction preserving steps()'s dst-major order
+        # (``for dst ... for src ... if src != dst``) — the O(n^2) listcomp
+        # dominates pod-scale sweep points, so the vectorized engine never
+        # pays it.
+        n = fab.n_gpus
+        chunk = nbytes // n
+        r = np.arange(n, dtype=np.int64)
+        dst = np.repeat(r, n)
+        src = np.tile(r, n)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        return [StepArrays(src=src, dst=dst,
+                           nbytes=np.full(len(src), chunk, dtype=np.int64),
+                           offset=src * chunk)]
 
 
 class RingAllReduce(CollectivePattern):
@@ -302,6 +373,18 @@ def simulated_dsts(pattern: CollectivePattern, step_specs, symmetric: bool,
     if symmetric and pattern.symmetric:
         return [pattern.representative_dst(fab)]
     return sorted({s.dst for step in step_specs for s in step}) or [0]
+
+
+def simulated_dsts_arrays(pattern: CollectivePattern,
+                          step_arrays: List[StepArrays], symmetric: bool,
+                          fab: FabricConfig) -> List[int]:
+    """:func:`simulated_dsts` for the :class:`StepArrays` schedule form."""
+    if symmetric and pattern.symmetric:
+        return [pattern.representative_dst(fab)]
+    ds: set = set()
+    for st in step_arrays:
+        ds.update(np.unique(st.dst).tolist())
+    return sorted(ds) or [0]
 
 
 def analytic_volume(name: str, nbytes: int, fab: FabricConfig) -> int:

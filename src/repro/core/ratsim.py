@@ -55,38 +55,41 @@ class Comparison:
 
 def _resolve_cfg(n_gpus: int, collective: Optional[str],
                  cfg: Optional[SimConfig], cfg_kw,
-                 topology: Optional[str] = None) -> SimConfig:
+                 topology: Optional[str] = None,
+                 engine: Optional[str] = None) -> SimConfig:
     cfg = cfg or paper_config(n_gpus, **cfg_kw)
     if collective is not None:
         cfg = cfg.replace(collective=collective)
     if topology is not None:
         cfg = cfg.replace(
             fabric=dataclasses.replace(cfg.fabric, topology=topology))
+    if engine is not None:
+        cfg = cfg.replace(engine=engine)
     return cfg
 
 
 def run(nbytes: int, n_gpus: int = 16, *, collective: Optional[str] = None,
-        topology: Optional[str] = None,
+        topology: Optional[str] = None, engine: Optional[str] = None,
         cfg: Optional[SimConfig] = None, **cfg_kw) -> RunResult:
     return simulate(nbytes, _resolve_cfg(n_gpus, collective, cfg, cfg_kw,
-                                         topology))
+                                         topology, engine))
 
 
 def compare(nbytes: int, n_gpus: int = 16, *,
             collective: Optional[str] = None,
-            topology: Optional[str] = None,
+            topology: Optional[str] = None, engine: Optional[str] = None,
             cfg: Optional[SimConfig] = None, **cfg_kw) -> Comparison:
-    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw, topology)
+    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw, topology, engine)
     return Comparison(baseline=simulate(nbytes, cfg),
                       ideal=simulate(nbytes, cfg.ideal()))
 
 
 def session(n_gpus: int = 16, *, collective: Optional[str] = None,
-            topology: Optional[str] = None,
+            topology: Optional[str] = None, engine: Optional[str] = None,
             cfg: Optional[SimConfig] = None, **cfg_kw) -> SimSession:
     """A persistent-TLB session on a fresh pod (repro.core.session)."""
     return SimSession(_resolve_cfg(n_gpus, collective, cfg, cfg_kw,
-                                   topology))
+                                   topology, engine))
 
 
 # ---------------------------------------------------------------- sweeps
@@ -130,6 +133,7 @@ def _spawnable() -> bool:
 def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
           topologies: Optional[Iterable[str]] = None,
           base_cfg: Optional[SimConfig] = None,
+          engine: Optional[str] = None,
           workers: Optional[int] = None,
           cache: Optional[MutableMapping] = None,
           **cfg_kw) -> Dict[tuple, Comparison]:
@@ -142,6 +146,9 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
     with both, keys are ``(topology, collective, n_gpus, size)``.  Tier
     parameters (leaf size, oversubscription, pod size) come from
     ``base_cfg``'s fabric when given, else the ``FabricConfig`` defaults.
+    ``engine`` overrides ``SimConfig.engine`` on every point (bit-for-bit
+    identical numbers; ``"vectorized"`` prices large grids ~10x faster —
+    note the two engines memoize under distinct cache keys).
 
     Points are independent, so large grids fan out over a
     ``concurrent.futures`` process pool — ``workers=None`` sizes the pool to
@@ -181,6 +188,8 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
                     if topo is not None:
                         cfg = cfg.replace(fabric=dataclasses.replace(
                             cfg.fabric, topology=topo))
+                    if engine is not None:
+                        cfg = cfg.replace(engine=engine)
                     key = (n, s)
                     if collectives is not None:
                         key = (coll,) + key

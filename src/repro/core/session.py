@@ -39,9 +39,52 @@ import numpy as np
 from .config import SimConfig
 from .engine import (EpochEngine, IterationResult, RunResult,
                      flows_for_dst)
-from .patterns import get_pattern, simulated_dsts
+from .engine_vec import VecEngine, flows_from_specs, request_counts
+from .patterns import (get_pattern, simulated_dsts, simulated_dsts_arrays)
 from .tlb import Counters
 from .topology import get_topology
+
+ENGINES = ("event", "vectorized")
+
+
+def _group_fabric(cfg: SimConfig, collective: Optional[str],
+                  n_gpus: Optional[int], rank_stride: int):
+    """(name, fab_n, pattern) after the per-call group validation."""
+    fab = cfg.fabric
+    name = collective if collective is not None else cfg.collective
+    fab_n = (fab if n_gpus is None or n_gpus == fab.n_gpus
+             else dataclasses.replace(fab, n_gpus=n_gpus))
+    if fab_n.n_gpus > fab.n_gpus:
+        raise ValueError(
+            f"collective group of {fab_n.n_gpus} exceeds pod size "
+            f"{fab.n_gpus}")
+    if rank_stride < 1:
+        raise ValueError(f"rank_stride must be >= 1, got {rank_stride}")
+    if (fab_n.n_gpus - 1) * rank_stride + 1 > fab.n_gpus:
+        raise ValueError(
+            f"strided group ({fab_n.n_gpus} ranks x stride {rank_stride}) "
+            f"exceeds pod size {fab.n_gpus}")
+    return name, fab_n, get_pattern(name)
+
+
+def _effective_symmetric(cfg: SimConfig, fab_n, rank_stride: int) -> bool:
+    """Whether the single-target shortcut is exact for this placement."""
+    symmetric = cfg.symmetric
+    topo = get_topology(cfg.fabric)
+    if symmetric and not topo.flat:
+        # On a tiered fabric the single-target shortcut is only exact when
+        # every rank of the group sees the same intra/inter tier mix:
+        # the whole group inside one tier-0 block, a stride that makes
+        # every pair inter-block, or a contiguous group covering whole
+        # blocks.  Anything else (a group straddling a partial block, a
+        # misaligned stride) mixes tiers per target — simulate every one.
+        block = topo.tier0_group()
+        g, s = fab_n.n_gpus, rank_stride
+        all_intra = (g - 1) * s + 1 <= block
+        uniform = s % block == 0 or (s == 1 and g % block == 0)
+        if not (all_intra or uniform):
+            symmetric = False
+    return symmetric
 
 
 def resolve_collective(cfg: SimConfig, nbytes: int,
@@ -61,44 +104,36 @@ def resolve_collective(cfg: SimConfig, nbytes: int,
     isomorphic); on hierarchical topologies it decides which flows cross
     tiers, e.g. a strided gradient ring pays the spine on every hop.
     """
-    fab = cfg.fabric
-    name = collective if collective is not None else cfg.collective
-    fab_n = (fab if n_gpus is None or n_gpus == fab.n_gpus
-             else dataclasses.replace(fab, n_gpus=n_gpus))
-    if fab_n.n_gpus > fab.n_gpus:
-        raise ValueError(
-            f"collective group of {fab_n.n_gpus} exceeds pod size "
-            f"{fab.n_gpus}")
-    if rank_stride < 1:
-        raise ValueError(f"rank_stride must be >= 1, got {rank_stride}")
-    if (fab_n.n_gpus - 1) * rank_stride + 1 > fab.n_gpus:
-        raise ValueError(
-            f"strided group ({fab_n.n_gpus} ranks x stride {rank_stride}) "
-            f"exceeds pod size {fab.n_gpus}")
-    pattern = get_pattern(name)
+    name, fab_n, pattern = _group_fabric(cfg, collective, n_gpus,
+                                         rank_stride)
     step_specs = pattern.steps(nbytes, fab_n)
     if rank_stride > 1:
         step_specs = [
             [dataclasses.replace(s, src=s.src * rank_stride,
                                  dst=s.dst * rank_stride) for s in step]
             for step in step_specs]
-    symmetric = cfg.symmetric
-    topo = get_topology(fab)
-    if symmetric and not topo.flat:
-        # On a tiered fabric the single-target shortcut is only exact when
-        # every rank of the group sees the same intra/inter tier mix:
-        # the whole group inside one tier-0 block, a stride that makes
-        # every pair inter-block, or a contiguous group covering whole
-        # blocks.  Anything else (a group straddling a partial block, a
-        # misaligned stride) mixes tiers per target — simulate every one.
-        block = topo.tier0_group()
-        g, s = fab_n.n_gpus, rank_stride
-        all_intra = (g - 1) * s + 1 <= block
-        uniform = s % block == 0 or (s == 1 and g % block == 0)
-        if not (all_intra or uniform):
-            symmetric = False
+    symmetric = _effective_symmetric(cfg, fab_n, rank_stride)
     dsts = simulated_dsts(pattern, step_specs, symmetric, fab_n)
     return name, fab_n, step_specs, dsts
+
+
+def resolve_collective_arrays(cfg: SimConfig, nbytes: int,
+                              collective: Optional[str],
+                              n_gpus: Optional[int], rank_stride: int = 1):
+    """:func:`resolve_collective` in the columnar :class:`~repro.core.
+    patterns.StepArrays` form consumed by the vectorized engine.
+
+    Same validation, same stride placement, same symmetric demotion and the
+    same target set — only the schedule representation differs.
+    """
+    name, fab_n, pattern = _group_fabric(cfg, collective, n_gpus,
+                                         rank_stride)
+    steps = pattern.steps_arrays(nbytes, fab_n)
+    if rank_stride > 1:
+        steps = [st.with_stride(rank_stride) for st in steps]
+    symmetric = _effective_symmetric(cfg, fab_n, rank_stride)
+    dsts = simulated_dsts_arrays(pattern, steps, symmetric, fab_n)
+    return name, fab_n, steps, dsts
 
 
 @dataclass
@@ -130,8 +165,12 @@ class SimSession:
     """
 
     def __init__(self, cfg: SimConfig, *, compute_profile=None):
+        if cfg.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {cfg.engine!r}; known: {ENGINES}")
         self.cfg = cfg
         self.compute_profile = compute_profile
+        self._vec = cfg.engine == "vectorized"
         self.t = 0.0
         self.records: List[CollectiveResult] = []
         self._engines: Dict[int, EpochEngine] = {}
@@ -187,7 +226,8 @@ class SimSession:
     def _engine(self, dst: int) -> EpochEngine:
         eng = self._engines.get(dst)
         if eng is None:
-            eng = self._engines[dst] = EpochEngine(self.cfg, dst=dst)
+            cls = VecEngine if self._vec else EpochEngine
+            eng = self._engines[dst] = cls(self.cfg, dst=dst)
         return eng
 
     def _counters_total(self) -> Counters:
@@ -219,7 +259,9 @@ class SimSession:
         gap_ns = self.resolve_gap(gap_ns, phase, window_parts)
         if gap_ns:
             self.idle(gap_ns)
-        name, fab_n, step_specs, dsts = resolve_collective(
+        resolver = (resolve_collective_arrays if self._vec
+                    else resolve_collective)
+        name, fab_n, step_specs, dsts = resolver(
             cfg, nbytes, collective, n_gpus, rank_stride)
 
         # Trace only the first collective of the session (simulate's
@@ -236,6 +278,20 @@ class SimSession:
             comp = t
             for d in dsts:
                 eng = self._engine(d)
+                if self._vec:
+                    fa = flows_from_specs(specs, cfg, d, t_start=t)
+                    if fa is None:
+                        continue
+                    if base_offset:
+                        fa.base_addr = fa.base_addr + base_offset
+                    trace_this = collect and d == self._trace_dst
+                    fi_base = len(self._flow_sizes)
+                    if trace_this:
+                        self._flow_sizes.extend(request_counts(fa, rb))
+                    comp = max(comp, eng.run_iteration(
+                        fa, trace_this, fi_base=fi_base,
+                        first_step=si == 0))
+                    continue
                 flows = flows_for_dst(specs, cfg, d, t_start=t)
                 if base_offset:
                     for f in flows:

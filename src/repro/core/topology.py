@@ -33,6 +33,8 @@ from __future__ import annotations
 import functools
 from typing import TYPE_CHECKING, Dict, Optional, Type
 
+import numpy as np
+
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .config import FabricConfig
 
@@ -74,6 +76,28 @@ class Topology:
         """
         return None
 
+    # -- vectorized forms (repro.core.engine_vec) --------------------------
+    # The scalar methods above stay the single source of truth: the base
+    # fallbacks evaluate them per element, so a custom topology is correct
+    # (if slow) by construction, and the overrides below are pure selects on
+    # the same precomputed values — never re-derived arithmetic.
+    def tier_arr(self, src: np.ndarray, dst) -> np.ndarray:
+        """``tier(src[i], dst[i])`` for paired index arrays (or scalar dst)."""
+        dst_b = np.broadcast_to(np.asarray(dst, dtype=np.int64), src.shape)
+        return np.fromiter((self.tier(int(s), int(d))
+                            for s, d in zip(src, dst_b)),
+                           dtype=np.int64, count=len(src))
+
+    def path_latency_arr(self, src: np.ndarray, dst) -> np.ndarray:
+        """``path_latency_ns(src[i], dst)`` for an index array."""
+        return np.fromiter((self.path_latency_ns(int(s), int(dst))
+                            for s in src), dtype=np.float64, count=len(src))
+
+    def return_latency_arr(self, dst, src: np.ndarray) -> np.ndarray:
+        """``return_latency_ns(dst, src[i])`` for an index array."""
+        return np.fromiter((self.return_latency_ns(int(dst), int(s))
+                            for s in src), dtype=np.float64, count=len(src))
+
     # -- group structure ---------------------------------------------------
     def tier0_group(self) -> int:
         """Largest GPU group whose all-pairs traffic stays tier-0.
@@ -108,6 +132,15 @@ class SingleClos(Topology):
 
     def return_latency_ns(self, dst: int, src: int) -> float:
         return self.fab.return_ns
+
+    def tier_arr(self, src, dst):
+        return np.zeros(len(src), dtype=np.int64)
+
+    def path_latency_arr(self, src, dst):
+        return np.full(len(src), self.fab.oneway_ns)
+
+    def return_latency_arr(self, dst, src):
+        return np.full(len(src), self.fab.return_ns)
 
 
 class _BlockTopology(Topology):
@@ -153,6 +186,18 @@ class _BlockTopology(Topology):
 
     def tier_capacity(self, tier: int) -> Optional[float]:
         return self._cross_cap if tier == 1 else None
+
+    def tier_arr(self, src, dst):
+        dst_b = np.asarray(dst, dtype=np.int64)
+        return (src // self.block != dst_b // self.block).astype(np.int64)
+
+    def path_latency_arr(self, src, dst):
+        intra = src // self.block == int(dst) // self.block
+        return np.where(intra, self.fab.oneway_ns, self._inter_ns)
+
+    def return_latency_arr(self, dst, src):
+        intra = src // self.block == int(dst) // self.block
+        return np.where(intra, self.fab.return_ns, self._inter_ns)
 
     def tier0_group(self) -> int:
         return self.block

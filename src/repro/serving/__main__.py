@@ -74,6 +74,10 @@ def main(argv=None) -> int:
                    help="enable paper-§6.1 fused pre-translation probes")
     p.add_argument("--prefetch", action="store_true",
                    help="enable paper-§6.2 software TLB prefetch")
+    p.add_argument("--engine", default="event",
+                   choices=("event", "vectorized"),
+                   help="simulation engine (identical results; vectorized "
+                        "is ~10x faster at pod scale)")
     p.add_argument("--per-step", action="store_true",
                    help="print the per-step trace CSV")
     args = p.parse_args(argv)
@@ -89,7 +93,7 @@ def main(argv=None) -> int:
         output_mean=args.output_mean, max_decode_slots=args.slots,
         prefill_chunk_tokens=args.prefill_chunk,
         pretranslation=args.pretranslate, prefetch=args.prefetch,
-        trace_path=args.trace)
+        trace_path=args.trace, engine=args.engine)
     res = _traffic_point((pt,))
 
     pod = res.pod

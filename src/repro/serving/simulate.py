@@ -285,6 +285,7 @@ class TrafficPoint:
     pretranslation: bool = False        # paper §6.1 fused probes
     prefetch: bool = False              # paper §6.2 software prefetch
     trace_path: Optional[str] = None    # arrival="trace"
+    engine: str = "event"               # SimConfig.engine (bit-for-bit)
 
     def requests(self) -> List[Request]:
         kw = dict(prompt_mean=self.prompt_mean, output_mean=self.output_mean,
@@ -304,7 +305,8 @@ class TrafficPoint:
     def sim_config(self) -> SimConfig:
         pod = self.pod_spec()
         cfg = SimConfig(fabric=pod_fabric(pod),
-                        tlb_retention_ns=self.retention_ns)
+                        tlb_retention_ns=self.retention_ns,
+                        engine=self.engine)
         if self.l2_entries:
             tr = cfg.translation
             cfg = cfg.replace(translation=dataclasses.replace(

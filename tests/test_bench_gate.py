@@ -1,9 +1,11 @@
 """Tests for the engine micro-benchmark regression gate (benchmarks/run.py).
 
-The CI job measures the fixed grid, uploads it as an artifact, then gates
-it against the committed ``benchmarks/BENCH_baseline.json``; these tests
-pin the gate's semantics — most importantly that a synthetic 2x-slower
-point demonstrably fails — without ever timing anything.
+The CI job measures the fixed grid on both engines, uploads it as an
+artifact, then gates it against the committed
+``benchmarks/BENCH_baseline.json``; these tests pin the gate's semantics —
+most importantly that a synthetic 2x-slower point demonstrably fails and
+that a vectorized engine slower than the event engine fails — without ever
+timing anything.
 """
 import copy
 import json
@@ -14,20 +16,34 @@ from benchmarks.run import BASELINE_PATH, _bench_points, check_against
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
-def payload(walls):
-    return {"grid": "engine-v1",
-            "points": [{"topology": t, "n_gpus": n, "nbytes": b,
-                        "wall_s": w}
-                       for (t, n, b), w in zip(_bench_points(), walls)]}
+def payload(walls, vec_walls=None):
+    """A BENCH_engine.json-shaped dict over the real grid.
+
+    ``vec_walls`` adds the dual-engine columns; without it the payload has
+    the pre-vectorization single-engine schema, which the gate must still
+    accept (an old baseline after a schema change should not crash it).
+    """
+    points = []
+    for i, ((t, n, b), w) in enumerate(zip(_bench_points(), walls)):
+        p = {"topology": t, "n_gpus": n, "nbytes": b, "wall_s": w}
+        if vec_walls is not None:
+            p["wall_vec_s"] = vec_walls[i]
+            p["speedup"] = round(w / vec_walls[i], 2) if vec_walls[i] else 0.0
+        points.append(p)
+    return {"grid": "engine-v2", "points": points}
+
+
+WALLS = [0.5, 1.0, 0.8, 0.9, 1.2, 0.3, 0.6]
+VEC_WALLS = [0.05, 0.2, 0.06, 0.07, 0.05, 0.04, 0.03]
 
 
 class TestCheckAgainst:
     def test_identical_passes(self):
-        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        base = payload(WALLS)
         assert check_against(copy.deepcopy(base), base, 0.35) == []
 
     def test_2x_slower_point_fails(self):
-        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        base = payload(WALLS)
         cur = copy.deepcopy(base)
         cur["points"][1]["wall_s"] = 2.0          # 2x the 1.0s baseline
         failures = check_against(cur, base, 0.35)
@@ -35,7 +51,7 @@ class TestCheckAgainst:
         assert "gpus64" in failures[0] and "+100.0%" in failures[0]
 
     def test_within_tolerance_passes(self):
-        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        base = payload(WALLS)
         cur = copy.deepcopy(base)
         cur["points"][1]["wall_s"] = 1.3          # +30% < 35%
         assert check_against(cur, base, 0.35) == []
@@ -43,7 +59,7 @@ class TestCheckAgainst:
     def test_small_absolute_jitter_ignored(self):
         # A 5ms point doubling is timer noise, not an engine regression:
         # the absolute floor keeps the relative gate from flaking.
-        base = payload([0.005, 1.0, 0.8, 0.9, 0.3])
+        base = payload([0.005] + WALLS[1:])
         cur = copy.deepcopy(base)
         cur["points"][0]["wall_s"] = 0.010
         assert check_against(cur, base, 0.35) == []
@@ -51,12 +67,12 @@ class TestCheckAgainst:
         assert len(check_against(cur, base, 0.35)) == 1
 
     def test_faster_never_fails(self):
-        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
-        cur = payload([0.1, 0.2, 0.1, 0.1, 0.1])
+        base = payload(WALLS)
+        cur = payload([w / 5 for w in WALLS])
         assert check_against(cur, base, 0.35) == []
 
     def test_grid_mismatch_fails_both_ways(self):
-        base = payload([0.5, 1.0, 0.8, 0.9, 0.3])
+        base = payload(WALLS)
         cur = copy.deepcopy(base)
         dropped = cur["points"].pop()             # missing point
         failures = check_against(cur, base, 0.35)
@@ -65,6 +81,46 @@ class TestCheckAgainst:
         extra["points"].append(dict(dropped, topology="ring"))
         failures = check_against(extra, base, 0.35)
         assert any("not in baseline" in f for f in failures)
+
+
+class TestVectorizedGate:
+    def test_identical_dual_engine_passes(self):
+        base = payload(WALLS, VEC_WALLS)
+        assert check_against(copy.deepcopy(base), base, 0.35) == []
+
+    def test_vectorized_slower_than_event_fails(self):
+        # The whole point of the vectorized engine: on any grid point it
+        # must not lose to the event engine, regardless of the baseline.
+        base = payload(WALLS, VEC_WALLS)
+        cur = copy.deepcopy(base)
+        cur["points"][1]["wall_vec_s"] = 1.5      # event wall is 1.0s
+        failures = check_against(cur, base, 0.35)
+        assert any("slower than event" in f for f in failures)
+
+    def test_vectorized_wall_regression_fails(self):
+        base = payload(WALLS, VEC_WALLS)
+        cur = copy.deepcopy(base)
+        cur["points"][1]["wall_vec_s"] = 0.5      # 2.5x the 0.2s baseline
+        failures = check_against(cur, base, 0.35)
+        assert len(failures) == 1
+        assert "[vec]" in failures[0] and "gpus64" in failures[0]
+
+    def test_vec_vs_event_jitter_floor(self):
+        # Sub-floor inversions on millisecond points are timer noise.
+        base = payload([0.010] + WALLS[1:], [0.008] + VEC_WALLS[1:])
+        cur = copy.deepcopy(base)
+        cur["points"][0]["wall_vec_s"] = 0.012    # > event 0.010, by 2ms
+        assert check_against(cur, base, 0.35) == []
+
+    def test_old_single_engine_baseline_still_gates(self):
+        # A baseline predating the dual-engine schema gates the event wall
+        # only; the vec-vs-event rule still applies to the current run.
+        base = payload(WALLS)                     # no wall_vec_s
+        cur = payload(WALLS, VEC_WALLS)
+        assert check_against(copy.deepcopy(cur), base, 0.35) == []
+        cur["points"][2]["wall_vec_s"] = 2.0      # event wall is 0.8s
+        failures = check_against(cur, base, 0.35)
+        assert any("slower than event" in f for f in failures)
 
 
 class TestCommittedBaseline:
@@ -77,3 +133,12 @@ class TestCommittedBaseline:
                 for p in base["points"]}
         assert keys == set(_bench_points())
         assert all(p["wall_s"] > 0 for p in base["points"])
+
+    def test_baseline_has_vectorized_walls(self):
+        """Dual-engine schema with the headline >= 10x aggregate speedup
+        committed — the acceptance bar of the vectorized engine."""
+        with open(ROOT / BASELINE_PATH) as f:
+            base = json.load(f)
+        assert all(p["wall_vec_s"] > 0 for p in base["points"])
+        assert all(p["speedup"] > 0 for p in base["points"])
+        assert base["speedup"] >= 10.0

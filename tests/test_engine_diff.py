@@ -1,0 +1,292 @@
+"""Differential harness: vectorized engine vs event engine vs reference DES.
+
+The vectorized engine (``repro.core.engine_vec``) promises *bit-for-bit*
+identical results to the per-epoch event engine — same floats, same counter
+values, same traces — so the comparison here is exact equality, never
+``approx``.  Three layers of evidence:
+
+* a seed-pinned regression corpus (hypothesis-free, runs in tier-1) that
+  replays hand-picked and previously-found counterexample configs
+  deterministically, three-way against the reference DES where the
+  engine/DES contract is established (DESIGN.md §7 tolerances);
+* property-based fuzzing over random ``SimConfig``s — pattern, topology,
+  group placement/stride, L1/L2 geometry, PTW width, optimization probes,
+  message sizes from sub-page to multi-GB (``tests/test_engine_fuzz.py``,
+  skipped when hypothesis is not installed; the CI slow tier raises the
+  example budget via ``ENGINE_DIFF_EXAMPLES`` / ``-m slow``);
+* session-equivalence replays: heterogeneous collective sequences
+  (workload-derived and synthetic) through ``SimSession`` on both engines,
+  comparing the per-call ``Counters.delta`` streams — including
+  ``tlb_retention_ns`` idle-gap flushes, ``rank_stride`` placements and
+  ``base_offset`` buffer moves.
+
+Found a disagreement?  Append the shrunken config to ``CORPUS`` so it
+replays forever, then fix the engine.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (RefSession, SimSession, paper_config, simulate,
+                        simulate_ref, KB, MB, GB)
+from repro.core.config import (FabricConfig, PreTranslationConfig,
+                               PrefetchConfig, SimConfig, TLBConfig,
+                               TranslationConfig)
+from repro.core.patterns import PATTERNS
+from repro.workloads import derive_workload, replay
+
+PATTERN_NAMES = sorted(PATTERNS)
+
+# The reference DES is per-request: replaying multi-GB collectives through
+# it is prohibitive, and its exact-walk contract with the epoch engines is
+# established at paper-default translation parameters (DESIGN.md §7).
+REF_MAX_BYTES = 16 * MB
+
+
+# --------------------------------------------------------------- comparators
+def run_both(nbytes: int, cfg: SimConfig):
+    """(event, vectorized) RunResults for the same config."""
+    return (simulate(nbytes, cfg.replace(engine="event")),
+            simulate(nbytes, cfg.replace(engine="vectorized")))
+
+
+def assert_bit_for_bit(a, b):
+    """Event vs vectorized: every observable must be the identical float."""
+    assert b.completion_ns == a.completion_ns
+    assert ([i.completion_ns for i in b.iterations]
+            == [i.completion_ns for i in a.iterations])
+    assert b.counters.__dict__ == a.counters.__dict__
+    assert b.mean_stall_ns == a.mean_stall_ns
+    if a.trace is None:
+        assert b.trace is None
+    else:
+        assert np.array_equal(b.trace, a.trace)
+        assert np.array_equal(b.trace_flow_bounds, a.trace_flow_bounds)
+
+
+def assert_matches_ref(a, ref):
+    """Engine vs reference DES: exact counts, established completion
+    tolerance (the DES models ns-scale arrival-phase bunching the epoch
+    engines smooth over — test_core_sim.py pins the same bound)."""
+    assert a.counters.requests == ref.counters.requests
+    assert a.counters.walks == ref.counters.walks
+    assert a.counters.probes == ref.counters.probes
+    assert a.completion_ns == pytest.approx(ref.completion_ns, rel=0.05)
+
+
+def assert_deltas_equal(recs_a, recs_b):
+    """Per-call CollectiveResult streams from two sessions must align."""
+    assert len(recs_a) == len(recs_b)
+    for ra, rb in zip(recs_a, recs_b):
+        assert (rb.collective, rb.nbytes, rb.n_gpus) \
+            == (ra.collective, ra.nbytes, ra.n_gpus)
+        assert rb.t_start == ra.t_start
+        assert rb.t_end == ra.t_end
+        assert rb.counters.__dict__ == ra.counters.__dict__
+
+
+# ------------------------------------------------------------ pinned corpus
+def _two_tier(n=8, leaf=4, ov=2.0, **kw) -> SimConfig:
+    return SimConfig(fabric=FabricConfig(
+        n_gpus=n, topology="two_tier", leaf_size=leaf,
+        oversubscription=ov), **kw)
+
+
+def _multi_pod(n=8, pod=4, **kw) -> SimConfig:
+    return SimConfig(fabric=FabricConfig(
+        n_gpus=n, topology="multi_pod", pod_size=pod), **kw)
+
+
+def _tiny_tlbs(n=8, **kw) -> SimConfig:
+    """Scarce translation resources: 2-entry L1s, a 16-entry 2-way L2 and
+    two walkers force eviction and MSHR-coalescing churn."""
+    return paper_config(n).replace(
+        translation=TranslationConfig(
+            l1=TLBConfig(entries=2, assoc=0, hit_latency_ns=50.0,
+                         mshr_entries=256),
+            l2=TLBConfig(entries=16, assoc=2, hit_latency_ns=100.0,
+                         mshr_entries=512),
+            n_ptw=2), **kw)
+
+
+# (id, nbytes, cfg, compare_ref).  Deterministic — no hypothesis needed —
+# so CI replays past counterexamples on every tier-1 run.
+CORPUS = [
+    ("paper_default", 1 * MB, paper_config(16), True),
+    ("sub_page", 4 * KB, paper_config(8), True),
+    ("odd_bytes", 768 * KB + 13, paper_config(8), True),
+    ("one_request_per_flow", 2 * KB, paper_config(8), True),
+    ("multi_page_tail", 24 * MB, paper_config(8), False),
+    ("tiny_tlbs", 4 * MB, _tiny_tlbs(8), False),
+    ("tiny_tlbs_single_ptw", 1 * MB,
+     _tiny_tlbs(8).replace(
+         translation=TranslationConfig(
+             l1=TLBConfig(entries=2, assoc=2, hit_latency_ns=50.0,
+                          mshr_entries=256),
+             l2=TLBConfig(entries=16, assoc=0, hit_latency_ns=100.0,
+                          mshr_entries=512),
+             n_ptw=1)), False),
+    ("scarce_ingress", 16 * MB,
+     SimConfig(fabric=FabricConfig(n_gpus=16, ingress_entries=64)), False),
+    ("two_tier_hier", 4 * MB,
+     _two_tier(8).replace(collective="hier_all_to_all"), True),
+    ("two_tier_oversub4", 1 * MB, _two_tier(8, ov=4.0), True),
+    ("multi_pod_a2a", 4 * MB,
+     _multi_pod(8).replace(collective="multipod_all_to_all"), True),
+    ("pretranslate", 4 * MB,
+     paper_config(8).replace(pretranslation=PreTranslationConfig(
+         enabled=True, lead_time_ns=3000.0, pages_per_flow=0)), True),
+    ("prefetch", 32 * MB,
+     paper_config(8).replace(prefetch=PrefetchConfig(
+         enabled=True, depth=2)), False),
+    ("ideal", 1 * MB, paper_config(16).ideal(), True),
+    ("iterations_trace", 1 * MB,
+     paper_config(8).replace(iterations=2, collect_trace=True), False),
+    ("asymmetric_broadcast", 1 * MB,
+     paper_config(8).replace(collective="broadcast", symmetric=False),
+     True),
+    ("every_target", 1 * MB,
+     paper_config(8).replace(symmetric=False), False),
+    ("multi_gb", 2 * GB, paper_config(8), False),
+]
+
+
+@pytest.mark.parametrize("name,nbytes,cfg,with_ref",
+                         CORPUS, ids=[c[0] for c in CORPUS])
+def test_corpus_point(name, nbytes, cfg, with_ref):
+    a, b = run_both(nbytes, cfg)
+    assert_bit_for_bit(a, b)
+    assert a.counters.requests > 0
+    if with_ref:
+        assert nbytes <= REF_MAX_BYTES  # keep the corpus tier-1-fast
+        assert_matches_ref(a, simulate_ref(nbytes, cfg))
+
+
+@pytest.mark.parametrize("name", PATTERN_NAMES)
+def test_corpus_every_pattern(name):
+    """Every registered pattern, three-way (engine x engine x DES)."""
+    cfg = paper_config(8).replace(collective=name)
+    a, b = run_both(1 * MB, cfg)
+    assert_bit_for_bit(a, b)
+    assert_matches_ref(a, simulate_ref(1 * MB, cfg))
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        SimSession(paper_config(8).replace(engine="warp"))
+
+
+# -------------------------------------------------------- session sequences
+SESSION_SEQ = [
+    (256 * KB, {}),
+    (256 * KB, {}),                               # warm repeat
+    (512 * KB, {"collective": "ring_allreduce"}),
+    (1 * MB, {"collective": "all_gather", "n_gpus": 8}),
+    (256 * KB, {"n_gpus": 4, "rank_stride": 4}),  # strided DP subgroup
+    (256 * KB, {"gap_ns": 2e6}),                  # gap >= retention: flush
+    (256 * KB, {"base_offset": 64 * MB}),         # fresh pages, cold again
+    (256 * KB, {"gap_ns": 0.5e6}),                # short gap: stays warm
+]
+
+
+def _run_session(cfg: SimConfig):
+    sess = SimSession(cfg)
+    for nbytes, kw in SESSION_SEQ:
+        sess.run(nbytes, **kw)
+    return sess
+
+
+class TestSessionEquivalence:
+    def test_heterogeneous_sequence_deltas(self):
+        cfg = paper_config(16).replace(tlb_retention_ns=1e6)
+        ev = _run_session(cfg.replace(engine="event"))
+        vec = _run_session(cfg.replace(engine="vectorized"))
+        assert_deltas_equal(ev.records, vec.records)
+        a, b = ev.result(), vec.result()
+        assert b.completion_ns == a.completion_ns
+        assert b.counters.__dict__ == a.counters.__dict__
+        assert b.mean_stall_ns == a.mean_stall_ns
+
+    def test_sequence_matches_ref_session(self):
+        cfg = paper_config(16).replace(tlb_retention_ns=1e6)
+        vec = _run_session(cfg.replace(engine="vectorized"))
+        ref = RefSession(cfg)
+        for nbytes, kw in SESSION_SEQ:
+            ref.run(nbytes, **kw)
+        for rv, rr in zip(vec.records, ref.records):
+            assert rv.counters.walks == rr.counters.walks
+            assert rv.counters.requests == rr.counters.requests
+            assert rv.completion_ns == pytest.approx(rr.completion_ns,
+                                                     rel=0.05)
+
+    def test_session_trace_first_run_only(self):
+        cfg = paper_config(16).replace(collect_trace=True)
+        ev = _run_session(cfg.replace(engine="event"))
+        vec = _run_session(cfg.replace(engine="vectorized"))
+        a, b = ev.result(), vec.result()
+        assert a.trace is not None
+        assert np.array_equal(b.trace, a.trace)
+        assert np.array_equal(b.trace_flow_bounds, a.trace_flow_bounds)
+
+
+# ------------------------------------------------------- workload sequences
+class TinyMoE:
+    """Duck-typed ModelConfig stand-in (mirrors test_calibrate.TinyMoE)."""
+    name = "tiny-moe"
+    n_layers = 4
+    d_model = 512
+    n_heads = 8
+    n_kv_heads = 4
+    d_head = 64
+    d_ff = 0
+    n_experts = 16
+    top_k = 2
+    d_ff_expert = 256
+    moe_every = 1
+    capacity_factor = 1.25
+
+
+def _replay_both(trace, cfg):
+    return (replay(trace, cfg=cfg.replace(engine="event")),
+            replay(trace, cfg=cfg.replace(engine="vectorized")))
+
+
+def _assert_replays_equal(ev, vec):
+    assert_deltas_equal(ev.calls, vec.calls)
+    for sa, sb in zip(ev.steps, vec.steps):
+        assert (sb.comm_ns, sb.ideal_comm_ns, sb.walks, sb.requests) \
+            == (sa.comm_ns, sa.ideal_comm_ns, sa.walks, sa.requests)
+
+
+class TestWorkloadReplayEquivalence:
+    def test_tiny_moe_decode(self):
+        from repro.workloads import pod_fabric
+        trace = derive_workload(TinyMoE(), "decode_32k", n_gpus=8,
+                                n_steps=3)
+        cfg = SimConfig(fabric=pod_fabric(trace.pod))
+        _assert_replays_equal(*_replay_both(trace, cfg))
+
+    def test_granite_decode_with_retention(self):
+        # Compute gaps between calls exceed retention: the replay's
+        # idle-flush path must age both engines' sessions identically.
+        from repro.workloads import pod_fabric
+        trace = derive_workload("granite-moe-1b-a400m", "decode_32k",
+                                n_gpus=16, n_steps=2)
+        cfg = SimConfig(fabric=pod_fabric(trace.pod),
+                        tlb_retention_ns=50_000.0)
+        ev, vec = _replay_both(trace, cfg)
+        _assert_replays_equal(ev, vec)
+        assert ev.steps[0].walks > 0   # the sequence actually walks
+
+    def test_tiny_moe_two_tier(self):
+        from repro.workloads import PodSpec, pod_fabric
+        trace = derive_workload(
+            TinyMoE(), "decode_32k", n_gpus=8, n_steps=2,
+            pod=PodSpec(topology="two_tier", leaf_size=4,
+                        oversubscription=2.0))
+        cfg = SimConfig(fabric=pod_fabric(trace.pod))
+        _assert_replays_equal(*_replay_both(trace, cfg))
+
+
+# The property-based fuzz over random SimConfigs lives in
+# tests/test_engine_fuzz.py: hypothesis is an optional dev dependency and a
+# module-level importorskip would take this deterministic corpus with it.

@@ -124,3 +124,87 @@ def test_fig13_rows_bit_for_bit():
     jax = pytest.importorskip("jax")  # noqa: F841 - arch configs need jax
     from benchmarks.paper_figs import fig13_workload_replay
     assert fig13_workload_replay() == FIG13_GOLDEN
+
+
+# --------------------------------------------------------------------------
+# fig14/fig15 small-grid goldens (PR 6 values): locked on BOTH engines —
+# the vectorized engine must reproduce the event engine's floats exactly,
+# so one golden table pins the physics of either.
+# --------------------------------------------------------------------------
+
+# fig14 topology-scaling rows at 1 MB (the full figure sweeps to 1024
+# GPUs; the golden keeps the 16/64-GPU columns, enough to lock the
+# degenerate-tier agreement at 16 and the per-topology split at 64):
+# (topology, n_gpus) -> (cold_ns, warm_ns, ideal_cold_ns, ideal_warm_ns,
+# walks) with the figure's tier parameters (16-GPU leaves, 2x spine
+# oversubscription, 16-GPU pods) and iterations=2 (cold then warm).
+FIG14_GOLDEN = {
+    ("single_clos", 16): (3890.0, 2852.0, 2802.0, 2802.0, 1),
+    ("single_clos", 64): (3890.0, 2875.04, 2825.04, 2825.04, 1),
+    ("two_tier", 16): (3890.0, 2852.0, 2802.0, 2802.0, 1),
+    ("two_tier", 64): (4490.0, 4407.68, 4357.68, 4357.68, 1),
+    ("multi_pod", 16): (3890.0, 2852.0, 2802.0, 2802.0, 1),
+    ("multi_pod", 64): (5975.360000000001, 5975.359999999999,
+                        5925.360000000001, 5925.359999999999, 1),
+}
+
+
+def _fig14_cfg(topo, n, engine):
+    from repro.core.config import FabricConfig, SimConfig
+    return SimConfig(fabric=FabricConfig(n_gpus=n, topology=topo,
+                                         leaf_size=16, oversubscription=2.0,
+                                         pod_size=16),
+                     iterations=2, engine=engine)
+
+
+@pytest.mark.parametrize("engine", ["event", "vectorized"])
+@pytest.mark.parametrize("topo,n", sorted(FIG14_GOLDEN))
+def test_fig14_rows_bit_for_bit(topo, n, engine):
+    cold, warm, i_cold, i_warm, walks = FIG14_GOLDEN[(topo, n)]
+    c = ratsim.compare(1 * MB, n, cfg=_fig14_cfg(topo, n, engine))
+    b, i = c.baseline.iterations, c.ideal.iterations
+    assert (b[0].completion_ns, b[1].completion_ns) == (cold, warm)
+    assert (i[0].completion_ns, i[1].completion_ns) == (i_cold, i_warm)
+    assert c.baseline.counters.walks == walks
+    # The figure's headline: warm TLBs never cost more than the cold pass.
+    assert b[1].completion_ns <= b[0].completion_ns + 1e-9
+
+
+# One fig15 bursty serving point (scaled down from _FIG15_BASE: 12
+# requests, 60-step cap — the cold-burst tail regime survives intact:
+# p99 TTFT degradation well above the mean).
+FIG15_POINT = dict(arch="granite-moe-1b-a400m", rps=16.0, arrival="bursty",
+                   n_requests=12, seed=7, retention_ns=50_000.0,
+                   steps_cap=60, burst_size=4, burstiness=24.0,
+                   prompt_mean=128, output_mean=8)
+FIG15_GOLDEN = dict(
+    p50=2432782.6667737663,
+    p95=3432839.485653756,
+    p99=3478109.9026029403,
+    mean_deg=1.0583494148024755,
+    p99_deg=1.1010624819242405,
+    cold_comm_ns=7072922.8800069485,
+    warm_comm_ns=66063141.120014586,
+    cold_steps=4, steps=42, walks=288, served=12,
+)
+
+
+@pytest.mark.parametrize("engine", ["event", "vectorized"])
+def test_fig15_bursty_point_bit_for_bit(engine):
+    from repro.serving.simulate import TrafficPoint, _traffic_point
+
+    r = _traffic_point((TrafficPoint(engine=engine, **FIG15_POINT),))
+    ttft = r.ttft_percentiles()
+    assert ttft[50.0] == FIG15_GOLDEN["p50"]
+    assert ttft[95.0] == FIG15_GOLDEN["p95"]
+    assert ttft[99.0] == FIG15_GOLDEN["p99"]
+    assert r.mean_ttft_degradation == FIG15_GOLDEN["mean_deg"]
+    assert r.p99_ttft_degradation == FIG15_GOLDEN["p99_deg"]
+    assert r.cold_comm_ns == FIG15_GOLDEN["cold_comm_ns"]
+    assert r.warm_comm_ns == FIG15_GOLDEN["warm_comm_ns"]
+    assert r.cold_steps == FIG15_GOLDEN["cold_steps"]
+    assert len(r.steps) == FIG15_GOLDEN["steps"]
+    assert sum(s.walks for s in r.steps) == FIG15_GOLDEN["walks"]
+    assert len(r.first_token_served) == FIG15_GOLDEN["served"]
+    # Bursty cold-miss tail: p99 degradation clears the mean.
+    assert r.p99_ttft_degradation > r.mean_ttft_degradation
