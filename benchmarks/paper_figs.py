@@ -445,6 +445,94 @@ def fig15_serving_tail_latency() -> List[Row]:
     return rows
 
 
+# fig16 fleet grid: the fig15 serving regime served by a *fleet* of pod
+# replicas.  No TLB retention — a warmed replica stays warm forever, so the
+# only cold-RAT events after the initial warmup are replicas *born* cold by
+# the autoscaler.  Steady-state percentiles discard the first quarter of
+# the stream (both fleets start cold at t=0; the comparison isolates the
+# spin-up tax, not the shared warmup).
+_FIG16_BASE = dict(arch="granite-moe-1b-a400m", n_requests=32, seed=7,
+                   steps_cap=400, burst_size=4, burstiness=24.0,
+                   prompt_mean=128, output_mean=8, rps=16.0,
+                   arrival="bursty")
+_FIG16_SLO = 1.25          # p99 TTFT degradation the fleet must hold
+
+
+def _steady_p99_deg(res, after_ns: float) -> float:
+    d = [r.ttft_degradation for r in res.first_token_served
+         if r.req.arrival_ns >= after_ns
+         and r.ttft_degradation is not None]
+    return float(np.percentile(d, 99.0)) if d else float("nan")
+
+
+def fig16_fleet_scaling() -> List[Row]:
+    """Fig 16 (ours, beyond the paper): fleet provisioning vs the RAT tax.
+
+    The same bursty stream served by fleets of pod replicas
+    (repro.serving.fleet): replica counts and routing policies answer
+    "what holds p99 TTFT degradation under the SLO at this rps", and a
+    queue-depth autoscaler at *equal aggregate capacity* shows the cost of
+    elasticity — every replica it spins up starts with stone-cold Link
+    TLBs, so scale-up events re-inject the cold-walk warmup into the
+    steady-state tail that a statically provisioned (once-warmed) fleet
+    has already paid off.
+    """
+    from repro.serving import FleetPoint, TrafficPoint, sweep_fleet
+
+    traffic = TrafficPoint(**_FIG16_BASE)
+    reqs = traffic.requests()
+    cut_ns = reqs[len(reqs) // 4].arrival_ns
+    churn = dict(autoscale=True, min_replicas=1, scale_up_queued=1,
+                 scale_down_idle_ns=5e7)
+    pts = {
+        "static/r1/round_robin": FleetPoint(traffic=traffic, replicas=1),
+        "static/r2/round_robin": FleetPoint(traffic=traffic, replicas=2),
+        "static/r4/round_robin": FleetPoint(traffic=traffic, replicas=4),
+        "static/r2/least_loaded": FleetPoint(
+            traffic=traffic, replicas=2, router="least_loaded"),
+        "static/r2/affinity": FleetPoint(
+            traffic=traffic, replicas=2, router="affinity"),
+        "auto/r2/churn": FleetPoint(
+            traffic=traffic, replicas=2, max_replicas=2, **churn),
+        "auto/r2/churn_slow_spin": FleetPoint(
+            traffic=traffic, replicas=2, max_replicas=2,
+            spinup_latency_ns=2e7, **churn),
+    }
+    grid = sweep_fleet(list(pts.values()))
+    res = {name: grid[pt] for name, pt in pts.items()}
+    rows = []
+    for name, r in res.items():
+        p99 = _steady_p99_deg(r, cut_ns)
+        ttft = r.ttft_percentiles()
+        rows.append((f"fig16/{name}", ttft[50.0] / 1e3,
+                     f"steady_p99_deg={p99:.4f};"
+                     f"mean_deg={r.mean_ttft_degradation:.4f};"
+                     f"ttft_p99_us={ttft[99.0]/1e3:.1f};"
+                     f"spin_ups={r.spin_ups};retired={r.retired};"
+                     f"rejected={len(r.rejected)};"
+                     f"cold_steps={r.cold_steps};"
+                     f"holds_slo={p99 < _FIG16_SLO}"))
+    static = res["static/r2/round_robin"]
+    auto = res["auto/r2/churn"]
+    s_p99 = _steady_p99_deg(static, cut_ns)
+    a_p99 = _steady_p99_deg(auto, cut_ns)
+    rows.append(("fig16/check_cold_spinup_tax", 0.0,
+                 f"static_p99={s_p99:.4f};auto_p99={a_p99:.4f};"
+                 f"spin_ups={auto.spin_ups};"
+                 f"equal_capacity={auto.peak_replicas <= 2};"
+                 f"taxed={bool(auto.spin_ups >= 1 and a_p99 > s_p99)}"))
+    # The provisioning answer: smallest static fleet holding the SLO.
+    fits = [n.split("/")[1] for n in
+            ("static/r1/round_robin", "static/r2/round_robin",
+             "static/r4/round_robin")
+            if _steady_p99_deg(res[n], cut_ns) < _FIG16_SLO]
+    rows.append(("fig16/check_static_provisioning", 0.0,
+                 f"rps={_FIG16_BASE['rps']};slo={_FIG16_SLO};"
+                 f"smallest_fit={fits[0] if fits else 'none'};"
+                 f"any_fit={bool(fits)}"))
+    return rows
+
+
 def sched_costmodel() -> List[Row]:
     """Framework integration: cost model accuracy + warm-up chunk plans."""
     from repro.core.cost_model import CostModel
@@ -468,4 +556,5 @@ ALL = [fig4_overhead, fig5_latency, fig6_breakdown, fig7_hier, fig8_hum,
        fig9_10_traces, fig11_l2_sweep, fig12_collective_sweep,
        fig13_workload_replay, fig13_workload_replay_calibrated,
        fig14_topology_scaling, fig15_serving_tail_latency,
-       opt_pretranslation, opt_prefetch, sched_costmodel]
+       fig16_fleet_scaling, opt_pretranslation, opt_prefetch,
+       sched_costmodel]

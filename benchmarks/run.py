@@ -47,7 +47,13 @@ def figures() -> int:
 # itself, not the sweep pool.  Includes the paper-scale 1 GB point (epoch
 # expansion), tier-shaped two-tier points, and the pod-scale 512/256-GPU
 # points where the O(n^2) flow-materialization cost that motivated the
-# vectorized engine dominates (ROADMAP: fig14-scale sweeps).
+# vectorized engine dominates (ROADMAP: fig14-scale sweeps).  The special
+# ("fleet", 16, 0) point times an autoscaled fleet serving run
+# (repro.serving.fleet) on the event engine — the serving stack's wall
+# time is gated like any other point, but it carries no wall_vec_s: its
+# collectives are far below the size where vectorization wins, so a
+# vec-vs-event rule there would gate scheduler overhead, not the engine
+# (one untimed vectorized run still cross-checks engine agreement).
 def _bench_points():
     from repro.core import GB, MB
     return [
@@ -58,7 +64,45 @@ def _bench_points():
         ("two_tier", 512, 16 * MB),
         ("multi_pod", 64, 64 * MB),
         ("multi_pod", 256, 64 * MB),
+        ("fleet", 16, 0),
     ]
+
+
+def _fleet_bench_point(engine: str):
+    from repro.serving import FleetPoint, TrafficPoint
+    traffic = TrafficPoint(
+        arch="granite-moe-1b-a400m", rps=16.0, arrival="bursty",
+        n_requests=10, seed=7, steps_cap=40, burst_size=4,
+        burstiness=24.0, prompt_mean=64, output_mean=4, engine=engine)
+    return FleetPoint(traffic=traffic, replicas=2, router="least_loaded",
+                      autoscale=True, min_replicas=1, max_replicas=2,
+                      scale_up_queued=1, scale_down_idle_ns=5e7)
+
+
+def _measure_fleet(n_gpus: int, reps: int) -> dict:
+    """Time the fleet serving point (event engine), cross-check engines."""
+    from repro.serving.fleet import _fleet_point
+
+    wall = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = _fleet_point((_fleet_bench_point("event"),))
+        wall = min(wall, time.perf_counter() - t0)
+    vec = _fleet_point((_fleet_bench_point("vectorized"),))
+    key = [(s.t_start, s.t_end, s.comm_ns, s.walks) for s in res.steps]
+    if key != [(s.t_start, s.t_end, s.comm_ns, s.walks)
+               for s in vec.steps]:
+        raise AssertionError(
+            "engine disagreement on the fleet serving point")
+    comm = sum(s.comm_ns for s in res.steps)
+    print(f"# fleet/gpus{n_gpus}/serving: event {wall:.3f}s "
+          f"({len(res.steps)} steps, {res.spin_ups} spin-ups, "
+          f"p99_deg={res.p99_ttft_degradation:.4f})", file=sys.stderr)
+    return {"topology": "fleet", "n_gpus": n_gpus, "nbytes": 0,
+            "wall_s": round(wall, 4),
+            "completion_ns": round(comm, 2),
+            "degradation": res.p99_ttft_degradation,
+            "requests": len(res.requests)}
 
 
 def measure_engine(reps: int = 3) -> dict:
@@ -77,6 +121,9 @@ def measure_engine(reps: int = 3) -> dict:
     points = []
     t_all = time.perf_counter()
     for topo, n, nbytes in _bench_points():
+        if topo == "fleet":
+            points.append(_measure_fleet(n, reps))
+            continue
         fab = FabricConfig(n_gpus=n, topology=topo, leaf_size=16,
                            oversubscription=2.0, pod_size=16)
         walls = {}
@@ -114,8 +161,11 @@ def measure_engine(reps: int = 3) -> dict:
               f"event {walls['event']:.3f}s, "
               f"vec {walls['vectorized']:.3f}s ({speedup:.1f}x, "
               f"deg={c.degradation:.4f})", file=sys.stderr)
-    tot_e = sum(p["wall_s"] for p in points)
-    tot_v = sum(p["wall_vec_s"] for p in points)
+    # Aggregate speedup is a *collective-engine* headline: dual-engine
+    # points only (the fleet serving point has no vectorized wall).
+    dual = [p for p in points if "wall_vec_s" in p]
+    tot_e = sum(p["wall_s"] for p in dual)
+    tot_v = sum(p["wall_vec_s"] for p in dual)
     agg = tot_e / tot_v if tot_v else float("inf")
     print(f"# aggregate speedup: {tot_e:.3f}s / {tot_v:.3f}s = {agg:.1f}x",
           file=sys.stderr)
@@ -131,6 +181,8 @@ def _point_key(p: dict) -> tuple:
 
 def _point_name(key: tuple) -> str:
     topo, n, nbytes = key
+    if topo == "fleet":
+        return f"fleet/gpus{n}/serving"
     return f"{topo}/gpus{n}/{nbytes >> 20}MB"
 
 

@@ -2,17 +2,23 @@
 # processes (Poisson / bursty / trace file), a continuous-batching scheduler
 # whose live batch composition sizes each step's collectives, and
 # per-request TTFT / inter-token latency accounting with a cold-vs-warm
-# Link-TLB split.  `python -m repro.serving --arch ... --rps ...` runs
-# offline (no jax).  DESIGN.md §11.
+# Link-TLB split (DESIGN.md §11).  The fleet layer (DESIGN.md §13) serves
+# one stream across N pod replicas behind a router, a bounded admission
+# queue and a queue-depth autoscaler whose spin-ups start stone-cold.
+# `python -m repro.serving --arch ... --rps ...` (optionally `--fleet`)
+# runs offline (no jax).
 from .arrivals import (Request, bursty_requests, poisson_requests,
                        trace_requests)
+from .fleet import (FleetPoint, FleetResult, Replica, simulate_fleet,
+                    sweep_fleet)
 from .scheduler import ContinuousBatcher, RequestStats, StepPlan
-from .simulate import (ServingStep, TrafficPoint, TrafficResult,
+from .simulate import (PodStream, ServingStep, TrafficPoint, TrafficResult,
                        serving_layout, simulate_traffic, sweep_traffic)
 
 __all__ = [
     "Request", "bursty_requests", "poisson_requests", "trace_requests",
     "ContinuousBatcher", "RequestStats", "StepPlan",
-    "ServingStep", "TrafficPoint", "TrafficResult", "serving_layout",
-    "simulate_traffic", "sweep_traffic",
+    "PodStream", "ServingStep", "TrafficPoint", "TrafficResult",
+    "serving_layout", "simulate_traffic", "sweep_traffic",
+    "FleetPoint", "FleetResult", "Replica", "simulate_fleet", "sweep_fleet",
 ]

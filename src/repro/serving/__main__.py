@@ -12,6 +12,11 @@ inter-token latency with the cold-vs-warm Link-TLB communication split.
 ``--retention-ns`` the idle gaps between bursts flush the warmed
 translations and each burst's leading requests re-pay the cold walks — the
 tail-latency regime fig15 sweeps.
+
+``--fleet N`` serves the same stream across N pod replicas behind a router
+(``--router``), a bounded admission queue (``--max-queue``) and, with
+``--autoscale``, a queue-depth autoscaler whose spin-ups start with
+stone-cold TLBs — the fleet-scale regime fig16 sweeps (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import argparse
 import sys
 
 from ..core.topology import TOPOLOGIES
+from .fleet import ROUTERS, FleetPoint, _fleet_point
 from .simulate import TrafficPoint, _traffic_point
 
 
@@ -78,8 +84,37 @@ def main(argv=None) -> int:
                    choices=("event", "vectorized"),
                    help="simulation engine (identical results; vectorized "
                         "is ~10x faster at pod scale)")
+    p.add_argument("--profile", default=None, metavar="FILE",
+                   help="saved ComputeProfile JSON: calibrated compute "
+                        "windows replace the rooflines (loaded jax-free)")
     p.add_argument("--per-step", action="store_true",
                    help="print the per-step trace CSV")
+    fl = p.add_argument_group(
+        "fleet", "serve the stream across N pod replicas (DESIGN.md §13)")
+    fl.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="fleet mode: number of pod replicas (with "
+                         "--autoscale, the default max)")
+    fl.add_argument("--router", default="round_robin",
+                    choices=ROUTERS, help="request routing policy")
+    fl.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: reject arrivals beyond this "
+                         "fleet-wide prefill backlog")
+    fl.add_argument("--autoscale", action="store_true",
+                    help="start at --min-replicas and grow on queue "
+                         "pressure; spin-ups start with stone-cold TLBs")
+    fl.add_argument("--min-replicas", type=int, default=1,
+                    help="autoscale floor (never retired below this)")
+    fl.add_argument("--max-replicas", type=int, default=0,
+                    help="autoscale ceiling on live replicas (0: --fleet)")
+    fl.add_argument("--scale-up-queued", type=int, default=4,
+                    help="spin up a replica when the admission queue "
+                         "exceeds this depth")
+    fl.add_argument("--scale-down-idle-ns", type=float, default=None,
+                    help="retire a replica idle longer than this "
+                         "(default: never retire)")
+    fl.add_argument("--spinup-latency-ns", type=float, default=0.0,
+                    help="delay between the scaling decision and the "
+                         "replica becoming routable")
     args = p.parse_args(argv)
 
     pt = TrafficPoint(
@@ -93,13 +128,40 @@ def main(argv=None) -> int:
         output_mean=args.output_mean, max_decode_slots=args.slots,
         prefill_chunk_tokens=args.prefill_chunk,
         pretranslation=args.pretranslate, prefetch=args.prefetch,
-        trace_path=args.trace, engine=args.engine)
-    res = _traffic_point((pt,))
+        trace_path=args.trace, engine=args.engine,
+        profile_path=args.profile)
+    if args.fleet > 0:
+        fp = FleetPoint(
+            traffic=pt, replicas=args.fleet, router=args.router,
+            max_queue=args.max_queue, autoscale=args.autoscale,
+            min_replicas=args.min_replicas, max_replicas=args.max_replicas,
+            scale_up_queued=args.scale_up_queued,
+            scale_down_idle_ns=args.scale_down_idle_ns,
+            spinup_latency_ns=args.spinup_latency_ns)
+        res = _fleet_point((fp,))
+    else:
+        res = _traffic_point((pt,))
 
     pod = res.pod
     print(f"# {res.arch} serving on {pod.n_gpus} GPUs "
           f"(topology={pod.topology}, ep={pod.ep} tp={pod.tp} dp={pod.dp}), "
           f"{args.arrival} arrivals at {args.rps} rps, seed {args.seed}")
+    if args.fleet > 0:
+        mode = (f"autoscale {args.min_replicas}.."
+                f"{args.max_replicas or args.fleet}" if args.autoscale
+                else f"static {args.fleet}")
+        print(f"# fleet: {mode} replicas, router={args.router}, "
+              f"{res.spin_ups} spin-ups, {res.retired} retired, "
+              f"{len(res.rejected)} rejected")
+        print("replica,spun_up_us,retired_us,routed,steps,walks,"
+              "cold_comm_us,warm_comm_us")
+        for row in res.replica_rows():
+            ret = ("" if row["retired_ns"] is None
+                   else f"{row['retired_ns']/1e3:.2f}")
+            print(f"{row['idx']},{row['spun_up_ns']/1e3:.2f},{ret},"
+                  f"{row['routed']},{row['steps']},{row['walks']},"
+                  f"{row['cold_comm_ns']/1e3:.2f},"
+                  f"{row['warm_comm_ns']/1e3:.2f}")
     served = res.first_token_served
     print(f"# steps: {len(res.steps)}"
           + (" (capped)" if res.steps_capped else "")

@@ -107,17 +107,26 @@ def bursty_requests(n_requests: int, rps: float, *, burst_size: int = 8,
 
 
 def trace_requests(path: str, *, limit: Optional[int] = None) -> List[Request]:
-    """Load ``arrival_ns,prompt_tokens,output_tokens`` lines from a file."""
-    out: List[Request] = []
+    """Load ``arrival_ns,prompt_tokens,output_tokens`` lines from a file.
+
+    ``limit`` keeps the first ``limit`` data lines *in file order* (the
+    natural truncation of a recorded trace), then the kept entries are
+    sorted by arrival time.  Request ids are assigned *after* the sort, so
+    rids are always 0..n-1 in arrival order exactly as the generated
+    processes produce them — an out-of-order trace file does not leak file
+    order into rid-based tie-breaks downstream (scheduler admission and
+    router affinity both key on rid).  Equal arrival times keep file order
+    (stable sort).
+    """
+    entries: List[tuple] = []           # (arrival_ns, prompt, output)
     with open(path) as f:
         for line in f:
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
             arrival, prompt, output = line.split(",")[:3]
-            out.append(Request(len(out), float(arrival), int(prompt),
-                               int(output)))
-            if limit is not None and len(out) >= limit:
+            entries.append((float(arrival), int(prompt), int(output)))
+            if limit is not None and len(entries) >= limit:
                 break
-    out.sort(key=lambda r: (r.arrival_ns, r.rid))
-    return out
+    entries.sort(key=lambda e: e[0])
+    return [Request(i, a, p, o) for i, (a, p, o) in enumerate(entries)]

@@ -68,8 +68,20 @@ class RequestStats:
 
     @property
     def ttft_degradation(self) -> Optional[float]:
+        """Baseline/ideal TTFT ratio; ``None`` only when unserved.
+
+        A *legitimate* zero ideal TTFT (the counterfactual serves the
+        first token the instant the request arrives — e.g. an arrival
+        coinciding with its first-token step) is infinite degradation,
+        not a missing sample: returning ``None`` there silently dropped
+        the worst-degraded requests from the percentiles.
+        """
         t, i = self.ttft_ns, self.ideal_ttft_ns
-        return None if (t is None or not i) else t / i
+        if t is None or i is None:
+            return None
+        if i <= 0.0:
+            return 1.0 if t <= 0.0 else float("inf")
+        return t / i
 
     @property
     def e2e_ns(self) -> Optional[float]:
@@ -82,7 +94,10 @@ class RequestStats:
         if self.finish_ns is None or self.ideal_finish_ns is None:
             return None
         ideal = self.ideal_finish_ns - self.req.arrival_ns
-        return (self.finish_ns - self.req.arrival_ns) / ideal if ideal else None
+        actual = self.finish_ns - self.req.arrival_ns
+        if ideal <= 0.0:                  # same zero-ideal contract as TTFT
+            return 1.0 if actual <= 0.0 else float("inf")
+        return actual / ideal
 
     @property
     def mean_itl_ns(self) -> Optional[float]:
@@ -141,6 +156,8 @@ class ContinuousBatcher:
         self.waiting: List[RequestStats] = []    # arrived, prefill not begun
         self.prefilling: List[RequestStats] = []
         self.decoding: List[RequestStats] = []
+        self._started = 0                        # prefills ever begun
+        self._finished = 0                       # requests ever finished
 
     # -- arrivals ------------------------------------------------------------
     def _admit(self, now_ns: float) -> None:
@@ -148,6 +165,21 @@ class ContinuousBatcher:
                and self.stats[self._next].req.arrival_ns <= now_ns):
             self.waiting.append(self.stats[self._next])
             self._next += 1
+
+    def add(self, req: Request) -> RequestStats:
+        """Feed one more request into a live batcher (fleet routing).
+
+        Requests must be added in nondecreasing arrival order — the fleet
+        router dispatches at arrival time, so this holds by construction —
+        keeping ``stats`` sorted and the ``_next`` admission pointer valid.
+        """
+        if self.stats and req.arrival_ns < self.stats[-1].req.arrival_ns:
+            raise ValueError(
+                f"out-of-order add: arrival {req.arrival_ns} precedes "
+                f"last routed arrival {self.stats[-1].req.arrival_ns}")
+        r = RequestStats(req=req)
+        self.stats.append(r)
+        return r
 
     def next_arrival_ns(self) -> Optional[float]:
         if self._next < len(self.stats):
@@ -159,6 +191,17 @@ class ContinuousBatcher:
         """All requests retired (arrived, served, finished)."""
         return (self._next >= len(self.stats) and not self.waiting
                 and not self.prefilling and not self.decoding)
+
+    # -- load accounting (router / autoscaler inputs) -------------------------
+    @property
+    def queued(self) -> int:
+        """Routed requests whose prefill has not begun (admission queue)."""
+        return len(self.stats) - self._started
+
+    @property
+    def load(self) -> int:
+        """Outstanding requests: routed and not yet finished (queue depth)."""
+        return len(self.stats) - self._finished
 
     # -- planning ------------------------------------------------------------
     def plan(self, now_ns: float) -> Optional[StepPlan]:
@@ -177,6 +220,7 @@ class ContinuousBatcher:
                and (len(self.prefilling) + len(self.decoding)
                     < self.max_decode_slots)):
             r = self.waiting.pop(0)
+            self._started += 1
             self.prefilling.append(r)
             take = min(budget, r.req.prompt_tokens)
             prefill.append((r, take))
@@ -216,6 +260,7 @@ class ContinuousBatcher:
                 if r.tokens_out >= r.req.output_tokens:
                     r.finish_ns = t_end
                     r.ideal_finish_ns = ideal_t_end
+                    self._finished += 1
                 else:
                     self.decoding.append(r)
         for r in plan.decode:
@@ -225,4 +270,5 @@ class ContinuousBatcher:
             if r.tokens_out >= r.req.output_tokens:
                 r.finish_ns = t_end
                 r.ideal_finish_ns = ideal_t_end
+                self._finished += 1
                 self.decoding.remove(r)

@@ -64,16 +64,14 @@ class ServingStep:
                 if self.ideal_comm_ns else float("nan"))
 
 
-@dataclass
-class TrafficResult:
-    """Per-request and per-step statistics of one serving simulation."""
+class ServingAggregates:
+    """Request/step aggregation shared by single-pod and fleet results.
 
-    arch: str
-    pod: PodSpec
-    cfg: SimConfig
-    requests: List[RequestStats]
-    steps: List[ServingStep]
-    steps_capped: bool = False
+    Mixin over anything exposing ``requests`` (a list of
+    :class:`RequestStats`) and ``steps`` (a list of :class:`ServingStep`);
+    :class:`TrafficResult` carries them as fields, the fleet result
+    aggregates them over its replicas.
+    """
 
     # -- aggregation ---------------------------------------------------------
     @property
@@ -108,7 +106,16 @@ class TrafficResult:
     @property
     def p99_ttft_degradation(self) -> float:
         d = self.ttft_degradations()
-        return float(np.percentile(d, 99.0)) if d else float("nan")
+        if not d:
+            return float("nan")
+        with np.errstate(invalid="ignore"):
+            p = float(np.percentile(d, 99.0))
+        # Zero-ideal requests carry infinite degradation; when the p99
+        # rank lands between two such samples numpy's interpolation is
+        # inf - inf = nan, but the order statistic itself is inf.
+        if np.isnan(p) and any(np.isinf(x) for x in d):
+            return float("inf")
+        return p
 
     # Pod-level comm split, aggregated from steps.  (Per-request
     # ``RequestStats.cold_comm_ns`` is *experienced* latency — every active
@@ -126,6 +133,18 @@ class TrafficResult:
     @property
     def cold_steps(self) -> int:
         return sum(1 for s in self.steps if s.walks > 0)
+
+
+@dataclass
+class TrafficResult(ServingAggregates):
+    """Per-request and per-step statistics of one serving simulation."""
+
+    arch: str
+    pod: PodSpec
+    cfg: SimConfig
+    requests: List[RequestStats]
+    steps: List[ServingStep]
+    steps_capped: bool = False
 
 
 def _resolve_arch(arch):
@@ -151,6 +170,147 @@ def serving_layout(mcfg, pod: PodSpec, max_step_tokens: int,
     return buffer_layout(probe, page_bytes)
 
 
+def resolve_traffic_pod(arch, pod: Optional[PodSpec],
+                        n_gpus: Optional[int],
+                        cfg: Optional[SimConfig]):
+    """``(mcfg, pod, cfg)`` after the shared serving-entry validation."""
+    mcfg = _resolve_arch(arch)
+    pod = pod or PodSpec()
+    if n_gpus is not None:
+        pod = dataclasses.replace(pod, n_gpus=n_gpus)
+    pod = resolve_pod(pod, mcfg, "decode")
+    cfg = cfg or SimConfig(fabric=pod_fabric(pod))
+    if cfg.fabric.n_gpus != pod.n_gpus:
+        raise ValueError(f"cfg pod size {cfg.fabric.n_gpus} != "
+                         f"pod size {pod.n_gpus}")
+    return mcfg, pod, cfg
+
+
+class PodStream:
+    """One pod's serving stream: session, batcher, ideal counterfactual.
+
+    The single-pod engine behind :func:`simulate_traffic`, factored out so
+    the fleet layer (:mod:`repro.serving.fleet`) can run N of them — one
+    per replica, each with its own :class:`SimSession` (and hence its own
+    Link-TLB warmth) — under an external event loop.  ``start_ns`` places
+    the stream's clock at the replica's spin-up time: a freshly spun
+    replica is a *cold* session whose first steps re-pay the full TLB
+    warmup, which is exactly the fleet-scale RAT event.
+
+    :meth:`advance` performs one scheduler decision — price one step, or
+    idle to the stream's next arrival — and :meth:`next_event_ns` exposes
+    when that decision would happen, so an external loop can interleave
+    several streams in global time order without ever letting one stream's
+    clock run ahead of an arrival that still has to be routed to it.
+    """
+
+    def __init__(self, mcfg, pod: PodSpec, cfg: SimConfig,
+                 requests: List[Request], *,
+                 max_decode_slots: int = 32,
+                 prefill_chunk_tokens: int = 512,
+                 compute_profile=None, start_ns: float = 0.0):
+        self.mcfg, self.pod, self.cfg = mcfg, pod, cfg
+        self.layout = serving_layout(
+            mcfg, pod, max_decode_slots + prefill_chunk_tokens,
+            cfg.translation.page_bytes)
+        self.sess = SimSession(cfg, compute_profile=compute_profile)
+        self.ideal = SimSession(cfg.ideal(), compute_profile=compute_profile)
+        self.sess.t = start_ns
+        self.ideal_clock = start_ns
+        self._ideal_ns: Dict[tuple, float] = {}  # signature -> ideal ns
+        self.batcher = ContinuousBatcher(
+            requests, max_decode_slots=max_decode_slots,
+            prefill_chunk_tokens=prefill_chunk_tokens)
+        self.em = StepEmitter(mcfg, pod)
+        self.steps: List[ServingStep] = []
+
+    @property
+    def t(self) -> float:
+        return self.sess.t
+
+    @property
+    def drained(self) -> bool:
+        return self.batcher.drained
+
+    def next_event_ns(self) -> Optional[float]:
+        """When the next :meth:`advance` call would act; ``None`` = drained.
+
+        ``sess.t`` when a step can be planned now (work admitted or in
+        flight), else the stream's next arrival (never before ``sess.t`` —
+        a stream cannot plan in its own past).
+        """
+        b = self.batcher
+        if b.decoding or b.prefilling or b.waiting:
+            return self.sess.t
+        nxt = b.next_arrival_ns()
+        if nxt is None:
+            return None
+        return max(nxt, self.sess.t)
+
+    def advance(self) -> Optional[ServingStep]:
+        """One scheduler decision: price one step, or idle to next arrival.
+
+        Returns the priced :class:`ServingStep`, or ``None`` when the
+        stream idled (or is drained — check :attr:`drained`).
+        """
+        plan = self.batcher.plan(self.sess.t)
+        if plan is None:
+            nxt = self.batcher.next_arrival_ns()
+            if nxt is None:          # nothing in flight, nothing to come
+                return None
+            # Idle to the next arrival: ages (and beyond the retention
+            # window, flushes) the warmed TLBs.  The ideal timeline waits
+            # for the same arrival.
+            self.sess.idle(nxt - self.sess.t)
+            self.ideal_clock = max(self.ideal_clock, nxt)
+            return None
+
+        # Causality floor for the ideal timeline: the counterfactual run
+        # executes the same step sequence, but a step serving a request's
+        # *first* prefill chunk cannot start before that request arrived —
+        # without this, a faster-than-baseline ideal clock could emit
+        # first tokens before their requests exist, inflating degradation
+        # with an unphysical queueing term.
+        new_arrivals = [r.req.arrival_ns for r, _t in plan.prefill
+                        if r.prefill_done == 0]
+        if new_arrivals:
+            self.ideal_clock = max(self.ideal_clock, max(new_arrivals))
+
+        sess, em, layout = self.sess, self.em, self.layout
+        t0 = sess.t
+        base = len(em.calls)
+        em.step(len(self.steps), plan.total_tokens,
+                prefix=f"t{len(self.steps)}")
+        comm = ideal_comm = compute = 0.0
+        walks = 0
+        for c in em.calls[base:]:
+            kw = dict(collective=c.collective, n_gpus=c.group,
+                      rank_stride=c.stride, gap_ns=c.compute_ns,
+                      base_offset=layout[c.buffer], label=c.label,
+                      phase=c.phase, window_parts=c.window_parts)
+            rec = sess.run(c.nbytes, **kw)
+            comm += rec.completion_ns
+            walks += rec.counters.walks
+            compute += sess.resolve_gap(c.compute_ns, c.phase,
+                                        c.window_parts)
+            sig = (c.collective, c.nbytes, c.group, c.stride)
+            if sig not in self._ideal_ns:
+                self._ideal_ns[sig] = self.ideal.run(
+                    c.nbytes, **kw).completion_ns
+            ideal_comm += self._ideal_ns[sig]
+        self.ideal_clock += compute + ideal_comm
+        step = ServingStep(
+            step=len(self.steps), t_start=t0, t_end=sess.t,
+            decode_tokens=plan.decode_tokens,
+            prefill_tokens=plan.prefill_tokens,
+            comm_ns=comm, ideal_comm_ns=ideal_comm, compute_ns=compute,
+            walks=walks)
+        self.steps.append(step)
+        self.batcher.commit(plan, sess.t, self.ideal_clock, comm,
+                            ideal_comm, walks)
+        return step
+
+
 def simulate_traffic(arch, requests: List[Request], *,
                      pod: Optional[PodSpec] = None,
                      n_gpus: Optional[int] = None,
@@ -169,87 +329,20 @@ def simulate_traffic(arch, requests: List[Request], *,
     the number of engine steps (unfinished requests simply stay
     unfinished); percentiles are computed over served requests.
     """
-    mcfg = _resolve_arch(arch)
-    pod = pod or PodSpec()
-    if n_gpus is not None:
-        pod = dataclasses.replace(pod, n_gpus=n_gpus)
-    pod = resolve_pod(pod, mcfg, "decode")
-    cfg = cfg or SimConfig(fabric=pod_fabric(pod))
-    if cfg.fabric.n_gpus != pod.n_gpus:
-        raise ValueError(f"cfg pod size {cfg.fabric.n_gpus} != "
-                         f"pod size {pod.n_gpus}")
-
-    layout = serving_layout(mcfg, pod,
-                            max_decode_slots + prefill_chunk_tokens,
-                            cfg.translation.page_bytes)
-    sess = SimSession(cfg, compute_profile=compute_profile)
-    ideal = SimSession(cfg.ideal(), compute_profile=compute_profile)
-    ideal_ns: Dict[tuple, float] = {}   # signature -> priced ideal duration
-    ideal_clock = 0.0
-
-    batcher = ContinuousBatcher(requests,
-                                max_decode_slots=max_decode_slots,
-                                prefill_chunk_tokens=prefill_chunk_tokens)
-    em = StepEmitter(mcfg, pod)
-    steps: List[ServingStep] = []
+    mcfg, pod, cfg = resolve_traffic_pod(arch, pod, n_gpus, cfg)
+    stream = PodStream(mcfg, pod, cfg, requests,
+                       max_decode_slots=max_decode_slots,
+                       prefill_chunk_tokens=prefill_chunk_tokens,
+                       compute_profile=compute_profile)
     capped = False
-    while not batcher.drained:
-        if steps_cap is not None and len(steps) >= steps_cap:
+    while not stream.drained:
+        if steps_cap is not None and len(stream.steps) >= steps_cap:
             capped = True
             break
-        plan = batcher.plan(sess.t)
-        if plan is None:
-            nxt = batcher.next_arrival_ns()
-            if nxt is None:          # nothing in flight, nothing to come
-                break
-            # Idle to the next arrival: ages (and beyond the retention
-            # window, flushes) the warmed TLBs.  The ideal timeline waits
-            # for the same arrival.
-            sess.idle(nxt - sess.t)
-            ideal_clock = max(ideal_clock, nxt)
-            continue
-
-        # Causality floor for the ideal timeline: the counterfactual run
-        # executes the same step sequence, but a step serving a request's
-        # *first* prefill chunk cannot start before that request arrived —
-        # without this, a faster-than-baseline ideal clock could emit
-        # first tokens before their requests exist, inflating degradation
-        # with an unphysical queueing term.
-        new_arrivals = [r.req.arrival_ns for r, _t in plan.prefill
-                        if r.prefill_done == 0]
-        if new_arrivals:
-            ideal_clock = max(ideal_clock, max(new_arrivals))
-
-        t0 = sess.t
-        base = len(em.calls)
-        em.step(len(steps), plan.total_tokens, prefix=f"t{len(steps)}")
-        comm = ideal_comm = compute = 0.0
-        walks = 0
-        for c in em.calls[base:]:
-            kw = dict(collective=c.collective, n_gpus=c.group,
-                      rank_stride=c.stride, gap_ns=c.compute_ns,
-                      base_offset=layout[c.buffer], label=c.label,
-                      phase=c.phase, window_parts=c.window_parts)
-            rec = sess.run(c.nbytes, **kw)
-            comm += rec.completion_ns
-            walks += rec.counters.walks
-            compute += sess.resolve_gap(c.compute_ns, c.phase,
-                                        c.window_parts)
-            sig = (c.collective, c.nbytes, c.group, c.stride)
-            if sig not in ideal_ns:
-                ideal_ns[sig] = ideal.run(c.nbytes, **kw).completion_ns
-            ideal_comm += ideal_ns[sig]
-        ideal_clock += compute + ideal_comm
-        steps.append(ServingStep(
-            step=len(steps), t_start=t0, t_end=sess.t,
-            decode_tokens=plan.decode_tokens,
-            prefill_tokens=plan.prefill_tokens,
-            comm_ns=comm, ideal_comm_ns=ideal_comm, compute_ns=compute,
-            walks=walks))
-        batcher.commit(plan, sess.t, ideal_clock, comm, ideal_comm, walks)
+        stream.advance()
 
     return TrafficResult(arch=mcfg.name, pod=pod, cfg=cfg,
-                         requests=batcher.stats, steps=steps,
+                         requests=stream.batcher.stats, steps=stream.steps,
                          steps_capped=capped)
 
 
@@ -286,6 +379,11 @@ class TrafficPoint:
     prefetch: bool = False              # paper §6.2 software prefetch
     trace_path: Optional[str] = None    # arrival="trace"
     engine: str = "event"               # SimConfig.engine (bit-for-bit)
+    # Path to a saved ComputeProfile JSON (workloads.calibrate): loaded
+    # jax-free *inside* whichever process prices the point, so pooled and
+    # serial executors resolve identical calibrated windows.  None keeps
+    # the roofline windows (bit-for-bit the uncalibrated behavior).
+    profile_path: Optional[str] = None
 
     def requests(self) -> List[Request]:
         kw = dict(prompt_mean=self.prompt_mean, output_mean=self.output_mean,
@@ -324,6 +422,18 @@ class TrafficPoint:
                        oversubscription=self.oversubscription,
                        pod_size=self.pod_size)
 
+    def load_profile(self):
+        """The point's :class:`ComputeProfile`, or ``None``.
+
+        Loaded from ``profile_path`` on demand — jax-free (the profile is
+        a JSON cache), and called inside the pool worker so the profile
+        object itself never crosses the process boundary.
+        """
+        if not self.profile_path:
+            return None
+        from ..workloads.calibrate import ComputeProfile
+        return ComputeProfile.load(self.profile_path)
+
 
 def _traffic_point(task: Tuple[TrafficPoint]) -> TrafficResult:
     (pt,) = task
@@ -331,23 +441,36 @@ def _traffic_point(task: Tuple[TrafficPoint]) -> TrafficResult:
                             cfg=pt.sim_config(),
                             max_decode_slots=pt.max_decode_slots,
                             prefill_chunk_tokens=pt.prefill_chunk_tokens,
-                            steps_cap=pt.steps_cap)
+                            steps_cap=pt.steps_cap,
+                            compute_profile=pt.load_profile())
 
 
-def sweep_traffic(points: Sequence[TrafficPoint], *,
-                  workers: Optional[int] = None
-                  ) -> Dict[TrafficPoint, TrafficResult]:
-    """Price every :class:`TrafficPoint`, fanned over a process pool.
+def fan_out_points(points: Sequence, worker, *,
+                   workers: Optional[int] = None) -> Dict:
+    """Price hashable sweep points through a module-level ``worker``.
 
+    The shared executor behind :func:`sweep_traffic` and the fleet sweep.
     Mirrors :func:`repro.core.ratsim.sweep`: ``workers=None`` sizes the
     pool to the host, ``workers=0`` forces the serial in-process path, and
     both paths return bit-for-bit identical results — each point's arrival
     stream is regenerated from its seed inside whichever process prices it,
     never shipped across the pool boundary.
+
+    Repeated points are priced **once**: the task list is deduplicated up
+    front (a point is its own sweep key, so duplicates are necessarily
+    identical work), mirroring ``ratsim.sweep``'s in-flight memoization,
+    and the returned mapping still covers every input point — equal points
+    are equal keys.
     """
     from ..core.ratsim import _spawnable
-    tasks = [(pt,) for pt in points]
-    results: List[TrafficResult] = []
+    unique: List = []
+    seen = set()
+    for pt in points:
+        if pt not in seen:
+            seen.add(pt)
+            unique.append(pt)
+    tasks = [(pt,) for pt in unique]
+    results: List = []
     n_workers = (min(len(tasks), os.cpu_count() or 1)
                  if workers is None else workers)
     if n_workers >= 2 and len(tasks) > 1 and _spawnable():
@@ -355,9 +478,20 @@ def sweep_traffic(points: Sequence[TrafficPoint], *,
             ctx = multiprocessing.get_context("spawn")
             with ProcessPoolExecutor(max_workers=n_workers,
                                      mp_context=ctx) as pool:
-                results = list(pool.map(_traffic_point, tasks))
+                results = list(pool.map(worker, tasks))
         except (OSError, BrokenProcessPool):
             results = []
     if not results and tasks:
-        results = [_traffic_point(t) for t in tasks]
-    return dict(zip(points, results))
+        results = [worker(t) for t in tasks]
+    return dict(zip(unique, results))
+
+
+def sweep_traffic(points: Sequence[TrafficPoint], *,
+                  workers: Optional[int] = None
+                  ) -> Dict[TrafficPoint, TrafficResult]:
+    """Price every :class:`TrafficPoint`, fanned over a process pool.
+
+    See :func:`fan_out_points` for the executor contract (serial ≡ pooled
+    bit-for-bit; duplicate points priced once).
+    """
+    return fan_out_points(points, _traffic_point, workers=workers)

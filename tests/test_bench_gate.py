@@ -26,15 +26,16 @@ def payload(walls, vec_walls=None):
     points = []
     for i, ((t, n, b), w) in enumerate(zip(_bench_points(), walls)):
         p = {"topology": t, "n_gpus": n, "nbytes": b, "wall_s": w}
-        if vec_walls is not None:
+        # The fleet serving point is event-engine-only (see _bench_points).
+        if vec_walls is not None and t != "fleet":
             p["wall_vec_s"] = vec_walls[i]
             p["speedup"] = round(w / vec_walls[i], 2) if vec_walls[i] else 0.0
         points.append(p)
     return {"grid": "engine-v2", "points": points}
 
 
-WALLS = [0.5, 1.0, 0.8, 0.9, 1.2, 0.3, 0.6]
-VEC_WALLS = [0.05, 0.2, 0.06, 0.07, 0.05, 0.04, 0.03]
+WALLS = [0.5, 1.0, 0.8, 0.9, 1.2, 0.3, 0.6, 2.0]
+VEC_WALLS = [0.05, 0.2, 0.06, 0.07, 0.05, 0.04, 0.03, None]
 
 
 class TestCheckAgainst:
@@ -112,6 +113,19 @@ class TestVectorizedGate:
         cur["points"][0]["wall_vec_s"] = 0.012    # > event 0.010, by 2ms
         assert check_against(cur, base, 0.35) == []
 
+    def test_fleet_point_gates_event_wall_only(self):
+        # The fleet serving point carries no wall_vec_s: its wall_s still
+        # gates like any point, but no vec-vs-event rule applies to it.
+        base = payload(WALLS, VEC_WALLS)
+        cur = copy.deepcopy(base)
+        assert cur["points"][-1]["topology"] == "fleet"
+        assert "wall_vec_s" not in cur["points"][-1]
+        assert check_against(copy.deepcopy(cur), base, 0.35) == []
+        cur["points"][-1]["wall_s"] = 4.0         # 2x the 2.0s baseline
+        failures = check_against(cur, base, 0.35)
+        assert len(failures) == 1
+        assert "fleet/gpus16/serving" in failures[0]
+
     def test_old_single_engine_baseline_still_gates(self):
         # A baseline predating the dual-engine schema gates the event wall
         # only; the vec-vs-event rule still applies to the current run.
@@ -136,9 +150,15 @@ class TestCommittedBaseline:
 
     def test_baseline_has_vectorized_walls(self):
         """Dual-engine schema with the headline >= 10x aggregate speedup
-        committed — the acceptance bar of the vectorized engine."""
+        committed — the acceptance bar of the vectorized engine.  The
+        fleet serving point is event-only by design (its collectives are
+        below the vectorization-win size) and sits outside the headline."""
         with open(ROOT / BASELINE_PATH) as f:
             base = json.load(f)
-        assert all(p["wall_vec_s"] > 0 for p in base["points"])
-        assert all(p["speedup"] > 0 for p in base["points"])
+        dual = [p for p in base["points"] if p["topology"] != "fleet"]
+        fleet = [p for p in base["points"] if p["topology"] == "fleet"]
+        assert all(p["wall_vec_s"] > 0 for p in dual)
+        assert all(p["speedup"] > 0 for p in dual)
         assert base["speedup"] >= 10.0
+        assert len(fleet) == 1 and fleet[0]["wall_s"] > 0
+        assert "wall_vec_s" not in fleet[0]

@@ -82,6 +82,24 @@ class TestArrivals:
         reqs = trace_requests(str(p))
         assert reqs == [Request(0, 1000.0, 8, 2), Request(1, 2000.0, 16, 4)]
 
+    def test_trace_rids_assigned_after_sort_with_ties(self, tmp_path):
+        # Regression: rids used to be assigned in *file* order before the
+        # arrival sort, so an out-of-order trace produced rid sequences
+        # like [2, 0, 1] — leaking file order into every rid-based
+        # tie-break downstream (admission order, router affinity).
+        p = tmp_path / "trace.csv"
+        p.write_text("3000,32,8\n1000,8,2\n1000,16,4\n2000,24,6\n")
+        reqs = trace_requests(str(p))
+        assert [r.rid for r in reqs] == [0, 1, 2, 3]
+        assert ([r.arrival_ns for r in reqs]
+                == [1000.0, 1000.0, 2000.0, 3000.0])
+        # The t=1000 tie keeps file order (stable sort).
+        assert (reqs[0].prompt_tokens, reqs[1].prompt_tokens) == (8, 16)
+        # limit truncates in file order first, then sorts what was kept.
+        head = trace_requests(str(p), limit=2)
+        assert ([(r.rid, r.arrival_ns) for r in head]
+                == [(0, 1000.0), (1, 3000.0)])
+
     def test_invalid_parameters_raise(self):
         with pytest.raises(ValueError):
             poisson_requests(4, 0.0)
@@ -166,6 +184,81 @@ class TestContinuousBatching:
             assert r.ideal_first_token_ns > r.req.arrival_ns
             assert r.ttft_degradation >= 1.0 - 1e-9
 
+    def test_single_output_token_finishes_at_prefill_commit(self):
+        # output_tokens == 1: the prefill commit *is* the finish.  The
+        # request never enters the decode set, so it contributes a TTFT
+        # sample but zero inter-token samples, and finish == first token.
+        import math
+        reqs = tiny_requests([0.0, 1000.0], prompt=16, output=1)
+        res = simulate_traffic(TINY, reqs, n_gpus=16)
+        assert len(res.finished) == 2
+        for r in res.requests:
+            assert r.tokens_out == 1
+            assert r.itl_ns == [] and r.mean_itl_ns is None
+            assert r.first_token_ns == r.finish_ns
+            assert r.ideal_first_token_ns == r.ideal_finish_ns
+        assert all(s.decode_tokens == 0 for s in res.steps)
+        assert math.isnan(res.itl_percentiles()[99.0])
+
+    def test_steps_cap_mid_prefill_excluded_from_percentiles(self):
+        # A steps_cap hit mid-prefill leaves a partial RequestStats: no
+        # first token, no finish — it must be excluded from finished /
+        # first_token_served and every percentile, not counted as a
+        # zero-latency sample.
+        import math
+        reqs = tiny_requests([0.0], prompt=100, output=4)
+        res = simulate_traffic(TINY, reqs, n_gpus=16,
+                               prefill_chunk_tokens=32, steps_cap=2)
+        assert res.steps_capped and len(res.steps) == 2
+        (r,) = res.requests
+        assert 0 < r.prefill_done < r.req.prompt_tokens
+        assert r.first_token_ns is None and not r.finished
+        assert r.ttft_ns is None and r.ttft_degradation is None
+        assert res.finished == [] and res.first_token_served == []
+        assert res.ttft_degradations() == []
+        assert math.isnan(res.ttft_percentiles()[99.0])
+        assert math.isnan(res.p99_ttft_degradation)
+
+
+# ------------------------------------------------------ degradation ratios
+class TestDegradationAccounting:
+    def _commit_one(self, arrival, t_end, ideal_t_end):
+        from repro.serving import ContinuousBatcher
+        b = ContinuousBatcher([Request(0, arrival, 4, 1)],
+                              prefill_chunk_tokens=8)
+        plan = b.plan(arrival)
+        b.commit(plan, t_end, ideal_t_end, 500.0, 100.0, 1)
+        return b.stats[0]
+
+    def test_zero_ideal_ttft_is_infinite_degradation(self):
+        # Regression: the ideal step can end exactly at the arrival (the
+        # counterfactual serves the first token the instant the request
+        # exists).  `not ideal_ttft` treated that legitimate 0.0 as a
+        # missing sample, silently dropping the *worst*-degraded requests
+        # from the percentiles.
+        r = self._commit_one(arrival=1000.0, t_end=2000.0,
+                             ideal_t_end=1000.0)
+        assert r.ideal_ttft_ns == 0.0 and r.ttft_ns == 1000.0
+        assert r.ttft_degradation == float("inf")
+        assert r.e2e_degradation == float("inf")
+        # ...and it flows into the aggregates instead of vanishing.
+        from repro.serving.simulate import TrafficResult
+        res = TrafficResult(arch="t", pod=None, cfg=None,
+                            requests=[r], steps=[])
+        assert res.ttft_degradations() == [float("inf")]
+        assert res.p99_ttft_degradation == float("inf")
+
+    def test_zero_over_zero_ttft_is_unit_degradation(self):
+        r = self._commit_one(arrival=1000.0, t_end=1000.0,
+                             ideal_t_end=1000.0)
+        assert r.ttft_ns == 0.0 and r.ideal_ttft_ns == 0.0
+        assert r.ttft_degradation == 1.0 and r.e2e_degradation == 1.0
+
+    def test_unserved_request_still_reports_none(self):
+        from repro.serving import RequestStats
+        r = RequestStats(req=Request(0, 0.0, 4, 1))
+        assert r.ttft_degradation is None and r.e2e_degradation is None
+
 
 # --------------------------------------------------------- TLB interaction
 class TestRetentionContract:
@@ -245,6 +338,81 @@ class TestSweepDeterminism:
     def test_point_regenerates_identical_arrivals(self):
         pt = self._points()[1]
         assert pt.requests() == pt.requests()
+
+    def test_duplicate_points_priced_once(self, monkeypatch):
+        # Regression: the serial path priced duplicate points once each —
+        # a sweep grid with repeated points paid for every repetition even
+        # though equal points are, by construction, identical work.
+        import repro.serving.simulate as sim_mod
+        pts = self._points()
+        calls = []
+        orig = sim_mod._traffic_point
+
+        def counting(task):
+            calls.append(task)
+            return orig(task)
+
+        monkeypatch.setattr(sim_mod, "_traffic_point", counting)
+        out = sim_mod.sweep_traffic([pts[0], pts[0], pts[1], pts[0]],
+                                    workers=0)
+        assert len(calls) == 2
+        # The mapping still covers every input point (equal points are
+        # equal keys) and matches a duplicate-free sweep bit-for-bit.
+        assert set(out) == set(pts)
+        clean = sweep_traffic(pts, workers=0)
+        for pt in pts:
+            assert ([(s.t_start, s.t_end) for s in out[pt].steps]
+                    == [(s.t_start, s.t_end) for s in clean[pt].steps])
+
+
+# ------------------------------------------------------ compute profiles
+class TestProfileThreading:
+    def _profile(self, calibrated_ns):
+        from repro.workloads.calibrate import ComputeProfile, PhaseWindow
+        phases = {ph: PhaseWindow(phase=ph, kernels=(), roofline_ns=1000.0,
+                                  measured_wall_ns=1000.0,
+                                  measured_flops=1.0,
+                                  calibrated_ns=calibrated_ns)
+                  for ph in ("attn_mixer", "moe_ffn")}
+        return ComputeProfile(arch=TINY.name, shape="serving", n_gpus=16,
+                              ep=16, tp=1, dp=1, phases=phases)
+
+    def test_profile_path_threads_through_pool(self, tmp_path):
+        # Regression: TrafficPoint silently dropped the compute profile —
+        # the pooled worker rebuilt the point without it, so calibrated
+        # sweeps diverged between the serial and pooled executors.
+        path = self._profile(50_000.0).save(tmp_path / "prof.json")
+        base = dict(arch=TINY, rps=200.0, arrival="poisson", seed=5,
+                    n_requests=4, steps_cap=16, prompt_mean=16,
+                    output_mean=2, max_decode_slots=4,
+                    prefill_chunk_tokens=32)
+        pt = TrafficPoint(profile_path=str(path), **base)
+        bare = TrafficPoint(**base)
+        serial = sweep_traffic([pt, bare], workers=0)
+        pooled = sweep_traffic([pt, bare], workers=2)
+        for p in (pt, bare):
+            assert ([(s.t_start, s.t_end, s.compute_ns, s.comm_ns)
+                     for s in serial[p].steps]
+                    == [(s.t_start, s.t_end, s.compute_ns, s.comm_ns)
+                        for s in pooled[p].steps])
+        # The profile actually reached the session: calibrated compute
+        # windows change the step timing vs the bare (roofline) point.
+        assert ([s.compute_ns for s in serial[pt].steps]
+                != [s.compute_ns for s in serial[bare].steps])
+
+    def test_profile_affects_ideal_timeline_consistently(self, tmp_path):
+        # Both the baseline and the ideal counterfactual see the same
+        # calibrated windows, so degradation stays a pure-RAT ratio.
+        path = self._profile(200_000.0).save(tmp_path / "p.json")
+        reqs = tiny_requests([0.0], prompt=16, output=2)
+        from repro.workloads.calibrate import ComputeProfile
+        res = simulate_traffic(TINY, reqs, n_gpus=16,
+                               compute_profile=ComputeProfile.load(path))
+        (r,) = res.requests
+        assert r.ttft_degradation is not None
+        # Huge calibrated windows dominate both timelines equally, so
+        # degradation is pinned near 1 even on the cold first step.
+        assert 1.0 - 1e-9 <= r.ttft_degradation < 1.5
 
 
 try:
