@@ -12,9 +12,10 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import ratsim, paper_config, simulate, MB, GB
+from repro.core import ratsim, paper_config, simulate, KB, MB, GB
 from repro.core.config import (TLBConfig, PreTranslationConfig,
-                               PrefetchConfig, FabricConfig, SimConfig)
+                               PrefetchConfig, FabricConfig, SimConfig,
+                               TranslationConfig)
 
 SIZES = [1 * MB, 4 * MB, 16 * MB, 64 * MB, 256 * MB, 1 * GB, 4 * GB]
 GPUS = [8, 16, 32, 64]
@@ -533,6 +534,114 @@ def fig16_fleet_scaling() -> List[Row]:
     return rows
 
 
+# fig17 deployment: 4 KB translation granules (the host-page regime) on the
+# 16-GPU Clos.  Under Table 1's 2 MB pages the cold-walk tax is a ~1 us
+# additive constant that never flips the algorithm choice; at 4 KB the tax
+# scales with the page count AND with how the algorithm's step structure
+# exposes it (a 2(n-1)-step ring re-pays a walk tail at every step barrier,
+# recursive doubling concentrates all walks in step 0), so cold and warm
+# completions rank the candidates differently near the ring/rd bandwidth
+# crossover.  Sizes are bucket-unique (one per power-of-two bucket) so each
+# prices its own PolicyTable row; 33 MB sits inside the crossover band.
+_FIG17_SIZES = (8 * MB, 16 * MB, 33 * MB, 64 * MB, 128 * MB)
+_FIG17_N = 16
+
+
+def fig17_algorithm_selection() -> List[Row]:
+    """Fig 17 (ours, beyond the paper): RAT-aware algorithm selection.
+
+    The policy layer (repro.core.select, DESIGN.md §14) prices every
+    registered candidate of a logical collective per (size, fabric, cold |
+    warm Link-TLB state).  This figure shows the selection surface for
+    ``allreduce`` on small translation pages: recursive doubling wins the
+    latency-bound sizes, the ring wins bandwidth-bound sizes, and in the
+    crossover band the *cold* optimum (rd — one concentrated walk storm)
+    differs from the *warm* optimum (ring — cheaper steady-state bytes).
+    A PolicyTable built from the same pricing then beats the fixed default
+    end-to-end through a persistent-TLB session: cold call resolved to rd,
+    warm re-issue of the same buffer resolved back to ring.
+    """
+    from repro.core.select import AutoPolicy, FixedPolicy, build_policy_table
+    from repro.core.session import SimSession
+
+    base = SimConfig(translation=TranslationConfig(page_bytes=4 * KB),
+                     engine="vectorized")
+    fab = FabricConfig(n_gpus=_FIG17_N)
+    auto = AutoPolicy(base=base)
+    rows = []
+    diverging = []
+    for s in _FIG17_SIZES:
+        sc = auto.scores("allreduce", s, fab)
+        cold = min(sc, key=lambda c: sc[c][0])
+        warm = min(sc, key=lambda c: sc[c][1])
+        if cold != warm:
+            diverging.append(s)
+        for cand in sorted(sc):
+            c_ns, w_ns = sc[cand]
+            rows.append((f"fig17/allreduce/size{s//MB}MB/{cand}",
+                         c_ns / 1e3,
+                         f"cold_us={c_ns/1e3:.2f};warm_us={w_ns/1e3:.2f};"
+                         f"cold_pick={cand == cold};"
+                         f"warm_pick={cand == warm}"))
+    rows.append(("fig17/check_cold_warm_optima_diverge", 0.0,
+                 f"page_kb=4;gpus={_FIG17_N};topology=single_clos;"
+                 f"diverging_sizes_mb={[s // MB for s in diverging]};"
+                 f"any={bool(diverging)}"))
+
+    # The deployable artifact: a PolicyTable cached from the same pricing
+    # (the AutoPolicy memo is shared, so nothing is simulated twice).
+    table = build_policy_table(_FIG17_SIZES, [_FIG17_N],
+                               logicals=("allreduce",), base=base, auto=auto)
+    sz = diverging[0] if diverging else 33 * MB
+    for state in ("cold", "warm"):
+        res = table.resolve("allreduce", sz, fab, state=state)
+        rows.append((f"fig17/table/size{sz//MB}MB/{state}", 0.0,
+                     f"collective={res.collective};"
+                     f"provenance={res.provenance}"))
+
+    # End-to-end on the diverging point, replayed through SimSession with
+    # the policy threaded (the same path derivation and serving use), in
+    # the regime where the cold-state entry matters: idle gaps past
+    # ``tlb_retention_ns`` flush the warmth between calls (fig15's bursty
+    # re-entry), so every call resolves in cold state — the table rides rd
+    # where the fixed default re-pays ring's per-step walk tails.
+    n_calls = 3
+    cfg = base.replace(fabric=fab, tlb_retention_ns=500_000.0)
+    totals = {}
+    for name, pol in (("fixed", FixedPolicy()), ("table", table)):
+        sess = SimSession(cfg, policy=pol)
+        recs = [sess.run(sz, collective="allreduce",
+                         gap_ns=0.0 if i == 0 else 1e6, label=f"call{i}")
+                for i in range(n_calls)]
+        totals[name] = sum(r.completion_ns for r in recs)
+        rows.append((f"fig17/session/flushed/{name}", totals[name] / 1e3,
+                     ";".join(f"{r.label}={r.collective}:"
+                              f"{r.completion_ns/1e3:.2f}us"
+                              for r in recs)))
+    gain = totals["fixed"] - totals["table"]
+    rows.append(("fig17/check_table_beats_fixed_default", 0.0,
+                 f"size_mb={sz//MB};calls={n_calls};"
+                 f"fixed_us={totals['fixed']/1e3:.2f};"
+                 f"table_us={totals['table']/1e3:.2f};"
+                 f"gain_us={gain/1e3:.2f};strict={gain > 0}"))
+    # The steady-warm counterpoint, reported for honesty: switching
+    # algorithms also switches which stations hold the warm L1 entries, so
+    # a cold rd -> warm ring transition re-fills L1s from L2 once — in a
+    # never-flushed steady loop the table's warm entry (ring, the fixed
+    # choice) is what keeps it from paying that transition repeatedly.
+    warm_cfg = base.replace(fabric=fab)
+    for name, pol in (("fixed", FixedPolicy()), ("table", table)):
+        sess = SimSession(warm_cfg, policy=pol)
+        recs = [sess.run(sz, collective="allreduce", label=f"call{i}")
+                for i in range(3)]
+        rows.append((f"fig17/session/steady/{name}",
+                     sum(r.completion_ns for r in recs) / 1e3,
+                     ";".join(f"{r.label}={r.collective}:"
+                              f"{r.completion_ns/1e3:.2f}us"
+                              for r in recs)))
+    return rows
+
+
 def sched_costmodel() -> List[Row]:
     """Framework integration: cost model accuracy + warm-up chunk plans."""
     from repro.core.cost_model import CostModel
@@ -556,5 +665,5 @@ ALL = [fig4_overhead, fig5_latency, fig6_breakdown, fig7_hier, fig8_hum,
        fig9_10_traces, fig11_l2_sweep, fig12_collective_sweep,
        fig13_workload_replay, fig13_workload_replay_calibrated,
        fig14_topology_scaling, fig15_serving_tail_latency,
-       fig16_fleet_scaling, opt_pretranslation, opt_prefetch,
-       sched_costmodel]
+       fig16_fleet_scaling, fig17_algorithm_selection, opt_pretranslation,
+       opt_prefetch, sched_costmodel]

@@ -7,10 +7,13 @@ from .config import (SimConfig, FabricConfig, TranslationConfig, TLBConfig,
                      PWCConfig, PreTranslationConfig, PrefetchConfig,
                      paper_config, KB, MB, GB)
 from .engine import simulate, RunResult
-from .patterns import (CollectivePattern, FlowSpec, PATTERNS, get_pattern,
-                       analytic_volume)
+from .patterns import (CollectivePattern, FlowSpec, PATTERNS, LOGICAL,
+                       register_pattern, candidates_for, logical_of,
+                       get_pattern, analytic_volume)
 from .ratsim import run, compare, session, sweep, Comparison
 from .ref_des import RefSession, simulate_ref
+from .select import (AlgorithmPolicy, AutoPolicy, FixedPolicy, PolicyTable,
+                     Resolution, build_policy_table, get_policy, size_bucket)
 from .session import CollectiveResult, SimSession
 from .topology import Topology, TOPOLOGIES, get_topology
 
@@ -20,6 +23,9 @@ __all__ = [
     "KB", "MB", "GB", "simulate", "RunResult", "run", "compare", "session",
     "sweep", "Comparison", "simulate_ref", "RefSession", "SimSession",
     "CollectiveResult", "CollectivePattern", "FlowSpec",
-    "PATTERNS", "get_pattern", "analytic_volume",
+    "PATTERNS", "LOGICAL", "register_pattern", "candidates_for",
+    "logical_of", "get_pattern", "analytic_volume",
+    "AlgorithmPolicy", "AutoPolicy", "FixedPolicy", "PolicyTable",
+    "Resolution", "build_policy_table", "get_policy", "size_bucket",
     "Topology", "TOPOLOGIES", "get_topology",
 ]

@@ -98,11 +98,76 @@ class StepArrays:
         return self._out_deg
 
 
+# Concrete pattern registry and logical equivalence classes, populated at
+# class-definition site by @register_pattern (DESIGN.md §14).  A *logical*
+# collective names the communication result ("allreduce"); its class lists
+# the registered algorithms that produce it, in registration order.  Four of
+# the five logical classes are named after their canonical member, so those
+# names are simultaneously a concrete registry key and a logical class key —
+# resolution order is defined by the policy layer (repro.core.select).
+PATTERNS: Dict[str, Type["CollectivePattern"]] = {}
+LOGICAL: Dict[str, List[str]] = {}
+
+
+def register_pattern(cls=None, *, logical: Optional[str] = None):
+    """Class decorator registering a :class:`CollectivePattern`.
+
+    Registers ``cls`` under ``cls.name`` in :data:`PATTERNS` and appends it
+    to the ``logical`` equivalence class in :data:`LOGICAL` (default: its
+    own name forms a singleton class).  Registry and class membership live
+    at the definition site, so adding an algorithm is one decorated class.
+    """
+    def _register(cls):
+        name = cls.name
+        if name in PATTERNS:
+            raise ValueError(f"duplicate collective pattern {name!r}")
+        PATTERNS[name] = cls
+        LOGICAL.setdefault(logical or name, []).append(name)
+        return cls
+    return _register(cls) if cls is not None else _register
+
+
+def logical_of(name: str) -> str:
+    """The logical equivalence class a concrete pattern belongs to."""
+    for logical, members in LOGICAL.items():
+        if name in members:
+            return logical
+    raise ValueError(
+        f"unknown collective {name!r}; known: {sorted(PATTERNS)}")
+
+
+def candidates_for(logical: str, fab: FabricConfig) -> List[str]:
+    """Concrete algorithms that can produce ``logical`` on this fabric.
+
+    ``fab`` carries the topology *and* the participating GPU count, which is
+    what per-pattern feasibility depends on (power-of-two ranks for
+    recursive doubling, group divisibility for the hierarchical variants).
+    Registration order; a concrete name is accepted and answers with the
+    rest of its own equivalence class.
+    """
+    if logical not in LOGICAL:
+        if logical in PATTERNS:
+            logical = logical_of(logical)
+        else:
+            raise ValueError(
+                f"unknown collective {logical!r}; known: {sorted(PATTERNS)}"
+                f"; logical classes: {sorted(LOGICAL)}")
+    return [name for name in LOGICAL[logical]
+            if PATTERNS[name].feasible(fab)]
+
+
 class CollectivePattern:
     """Base class: a collective algorithm as per-step flow sets."""
 
     name: str = "abstract"
     symmetric: bool = True
+
+    @classmethod
+    def feasible(cls, fab: FabricConfig) -> bool:
+        """Whether this algorithm can run on ``fab`` (group size/topology
+        preconditions); infeasible patterns are excluded from
+        :func:`candidates_for` instead of raising inside :meth:`steps`."""
+        return fab.n_gpus >= 2
 
     def steps(self, nbytes: int, fab: FabricConfig) -> List[List[FlowSpec]]:
         """Flow sets of each dependency step, in execution order."""
@@ -128,6 +193,7 @@ class CollectivePattern:
         return 0
 
 
+@register_pattern(logical="all_to_all")
 class AllToAll(CollectivePattern):
     """All-pairs/direct AllToAll (MSCCLang): the paper's workload.
 
@@ -162,6 +228,7 @@ class AllToAll(CollectivePattern):
                            offset=src * chunk)]
 
 
+@register_pattern(logical="allreduce")
 class RingAllReduce(CollectivePattern):
     """Bandwidth-optimal ring AllReduce: reduce-scatter then allgather.
 
@@ -193,6 +260,7 @@ class RingAllReduce(CollectivePattern):
         return steps
 
 
+@register_pattern(logical="allreduce")
 class RecursiveDoublingAllReduce(CollectivePattern):
     """Latency-optimal recursive-doubling AllReduce (power-of-two pods).
 
@@ -205,6 +273,11 @@ class RecursiveDoublingAllReduce(CollectivePattern):
 
     name = "rd_allreduce"
 
+    @classmethod
+    def feasible(cls, fab):
+        n = fab.n_gpus
+        return n >= 2 and not (n & (n - 1))
+
     def steps(self, nbytes, fab):
         n = fab.n_gpus
         if n < 2 or n & (n - 1):
@@ -215,6 +288,7 @@ class RecursiveDoublingAllReduce(CollectivePattern):
                 for s in range(n.bit_length() - 1)]
 
 
+@register_pattern(logical="all_gather")
 class RingAllGather(CollectivePattern):
     """Ring AllGather: each GPU ends with the ``nbytes`` concatenation.
 
@@ -233,6 +307,7 @@ class RingAllGather(CollectivePattern):
                 for s in range(n - 1)]
 
 
+@register_pattern(logical="reduce_scatter")
 class RingReduceScatter(RingAllGather):
     """Ring ReduceScatter: traffic-identical to ring AllGather.
 
@@ -244,6 +319,7 @@ class RingReduceScatter(RingAllGather):
     name = "reduce_scatter"
 
 
+@register_pattern(logical="broadcast")
 class BinomialBroadcast(CollectivePattern):
     """Binomial-tree broadcast from root 0 (any GPU count).
 
@@ -269,6 +345,7 @@ class BinomialBroadcast(CollectivePattern):
         return steps
 
 
+@register_pattern(logical="all_to_all")
 class HierarchicalAllToAll(CollectivePattern):
     """Two-level AllToAll: intra-group gather, then inter-group exchange.
 
@@ -293,6 +370,13 @@ class HierarchicalAllToAll(CollectivePattern):
 
     def _group(self, fab: FabricConfig) -> int:
         return get_topology(fab).local_group()
+
+    @classmethod
+    def feasible(cls, fab):
+        if fab.n_gpus < 2:
+            return False
+        g = cls()._group(fab)
+        return g > 0 and fab.n_gpus % g == 0
 
     def steps(self, nbytes, fab):
         n, g = fab.n_gpus, self._group(fab)
@@ -327,6 +411,7 @@ class HierarchicalAllToAll(CollectivePattern):
         return steps
 
 
+@register_pattern(logical="all_to_all")
 class MultiPodAllToAll(HierarchicalAllToAll):
     """Pod-granular two-phase AllToAll for ``multi_pod`` topologies.
 
@@ -346,21 +431,15 @@ class MultiPodAllToAll(HierarchicalAllToAll):
         return get_topology(fab).pod_group()
 
 
-PATTERNS: Dict[str, Type[CollectivePattern]] = {
-    cls.name: cls for cls in (
-        AllToAll, RingAllReduce, RecursiveDoublingAllReduce, RingAllGather,
-        RingReduceScatter, BinomialBroadcast, HierarchicalAllToAll,
-        MultiPodAllToAll)
-}
-
-
 def get_pattern(name: str) -> CollectivePattern:
     """Instantiate a registered pattern by name."""
     try:
         return PATTERNS[name]()
     except KeyError:
         raise ValueError(
-            f"unknown collective {name!r}; known: {sorted(PATTERNS)}") from None
+            f"unknown collective {name!r}; known: {sorted(PATTERNS)}"
+            f"; logical classes: {sorted(LOGICAL)} (logical names resolve "
+            f"through a policy — repro.core.select)") from None
 
 
 def simulated_dsts(pattern: CollectivePattern, step_specs, symmetric: bool,

@@ -31,7 +31,10 @@ from typing import Dict, Iterable, List, MutableMapping, Optional, Tuple
 
 from .config import SimConfig, FabricConfig, paper_config, MB
 from .engine import simulate, RunResult
-from .session import SimSession
+from .patterns import LOGICAL, PATTERNS
+from .select import get_policy
+from .session import ENGINES, SimSession
+from .topology import TOPOLOGIES
 
 
 @dataclass
@@ -56,7 +59,8 @@ class Comparison:
 def _resolve_cfg(n_gpus: int, collective: Optional[str],
                  cfg: Optional[SimConfig], cfg_kw,
                  topology: Optional[str] = None,
-                 engine: Optional[str] = None) -> SimConfig:
+                 engine: Optional[str] = None,
+                 policy=None, nbytes: Optional[int] = None) -> SimConfig:
     cfg = cfg or paper_config(n_gpus, **cfg_kw)
     if collective is not None:
         cfg = cfg.replace(collective=collective)
@@ -65,31 +69,47 @@ def _resolve_cfg(n_gpus: int, collective: Optional[str],
             fabric=dataclasses.replace(cfg.fabric, topology=topology))
     if engine is not None:
         cfg = cfg.replace(engine=engine)
+    if policy is not None:
+        # Free-standing runs start against stone-cold TLBs: the policy
+        # resolves a logical collective for the cold state (sessions track
+        # per-region warmth themselves — see SimSession).
+        pol = get_policy(policy)
+        cfg = cfg.replace(collective=pol.resolve(
+            cfg.collective, nbytes if nbytes is not None else 0,
+            cfg.fabric, state="cold").collective)
     return cfg
 
 
 def run(nbytes: int, n_gpus: int = 16, *, collective: Optional[str] = None,
         topology: Optional[str] = None, engine: Optional[str] = None,
-        cfg: Optional[SimConfig] = None, **cfg_kw) -> RunResult:
+        policy=None, cfg: Optional[SimConfig] = None, **cfg_kw) -> RunResult:
     return simulate(nbytes, _resolve_cfg(n_gpus, collective, cfg, cfg_kw,
-                                         topology, engine))
+                                         topology, engine, policy, nbytes))
 
 
 def compare(nbytes: int, n_gpus: int = 16, *,
             collective: Optional[str] = None,
             topology: Optional[str] = None, engine: Optional[str] = None,
-            cfg: Optional[SimConfig] = None, **cfg_kw) -> Comparison:
-    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw, topology, engine)
+            policy=None, cfg: Optional[SimConfig] = None,
+            **cfg_kw) -> Comparison:
+    cfg = _resolve_cfg(n_gpus, collective, cfg, cfg_kw, topology, engine,
+                       policy, nbytes)
     return Comparison(baseline=simulate(nbytes, cfg),
                       ideal=simulate(nbytes, cfg.ideal()))
 
 
 def session(n_gpus: int = 16, *, collective: Optional[str] = None,
             topology: Optional[str] = None, engine: Optional[str] = None,
-            cfg: Optional[SimConfig] = None, **cfg_kw) -> SimSession:
-    """A persistent-TLB session on a fresh pod (repro.core.session)."""
+            policy=None, cfg: Optional[SimConfig] = None,
+            **cfg_kw) -> SimSession:
+    """A persistent-TLB session on a fresh pod (repro.core.session).
+
+    ``policy`` is attached to the session (per-run cold/warm resolution),
+    not applied to ``cfg.collective`` up front — each ``run`` resolves with
+    the warmth its target region actually has at that point.
+    """
     return SimSession(_resolve_cfg(n_gpus, collective, cfg, cfg_kw,
-                                   topology, engine))
+                                   topology, engine), policy=policy)
 
 
 # ---------------------------------------------------------------- sweeps
@@ -130,10 +150,41 @@ def _spawnable() -> bool:
     return bool(path) and os.path.exists(path)
 
 
+def _validate_sweep_axes(colls, topos, engine, policy) -> None:
+    """Fail fast on bad axis names, before any pool dispatch.
+
+    A typo'd collective/engine/topology used to surface as a worker
+    traceback deep inside the process pool; every name is checked here
+    against its registry so the error happens eagerly in the caller, with
+    the registry contents in the message.
+    """
+    if engine is not None and engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; known: {ENGINES}")
+    for topo in topos:
+        if topo is not None and topo not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {topo!r}; known: "
+                             f"{sorted(TOPOLOGIES)}")
+    for coll in colls:
+        if coll is None or coll in PATTERNS:
+            continue
+        if coll in LOGICAL:
+            if policy is None:
+                raise ValueError(
+                    f"logical collective {coll!r} needs a policy= to pick "
+                    f"among its candidates {LOGICAL[coll]}; pass "
+                    f"policy='fixed'|'auto'|'table:<path>' or a concrete "
+                    f"name")
+            continue
+        raise ValueError(
+            f"unknown collective {coll!r}; known: {sorted(PATTERNS)}"
+            f"; logical classes: {sorted(LOGICAL)}")
+
+
 def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
           topologies: Optional[Iterable[str]] = None,
           base_cfg: Optional[SimConfig] = None,
           engine: Optional[str] = None,
+          policy=None,
           workers: Optional[int] = None,
           cache: Optional[MutableMapping] = None,
           **cfg_kw) -> Dict[tuple, Comparison]:
@@ -148,7 +199,12 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
     ``base_cfg``'s fabric when given, else the ``FabricConfig`` defaults.
     ``engine`` overrides ``SimConfig.engine`` on every point (bit-for-bit
     identical numbers; ``"vectorized"`` prices large grids ~10x faster —
-    note the two engines memoize under distinct cache keys).
+    note the two engines memoize under distinct cache keys).  ``policy``
+    (see :func:`repro.core.select.get_policy`) resolves each point's
+    collective — which may then be a *logical* class name like
+    ``"allreduce"`` — to a concrete algorithm before dispatch; axis names
+    are validated eagerly either way, so typos fail here rather than as a
+    worker traceback.
 
     Points are independent, so large grids fan out over a
     ``concurrent.futures`` process pool — ``workers=None`` sizes the pool to
@@ -171,6 +227,8 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
     seen_inflight: Dict[tuple, tuple] = {}
     colls = list(collectives) if collectives is not None else [None]
     topos = list(topologies) if topologies is not None else [None]
+    _validate_sweep_axes(colls, topos, engine, policy)
+    pol = get_policy(policy)
     for topo in topos:
         for coll in colls:
             for n in gpu_counts:
@@ -190,6 +248,14 @@ def sweep(sizes, gpu_counts, *, collectives: Optional[Iterable[str]] = None,
                             cfg.fabric, topology=topo))
                     if engine is not None:
                         cfg = cfg.replace(engine=engine)
+                    if pol is not None:
+                        # Per-point resolution (cold state: each sweep
+                        # point is a free-standing run on a fresh pod).
+                        # Resolution happens in the parent, so the cache
+                        # key and the worker both see the concrete name.
+                        cfg = cfg.replace(collective=pol.resolve(
+                            cfg.collective, s, cfg.fabric,
+                            state="cold").collective)
                     key = (n, s)
                     if collectives is not None:
                         key = (coll,) + key

@@ -28,6 +28,7 @@ import numpy as np
 from .config import SimConfig
 from .engine import (Flow, IterationResult, RunResult, epoch_spans,
                      flows_for_dst, pretranslate_probes, probe_station)
+from .select import get_policy, session_collective
 from .session import CollectiveResult, resolve_collective
 from .tlb import Counters, TranslationState
 
@@ -201,12 +202,18 @@ class RefSession:
     """Oracle mirror of :class:`repro.core.session.SimSession`.
 
     Same public surface (``run`` / ``idle`` / ``result`` / ``records``),
-    request-level physics.  Session-equivalence tests replay identical call
-    sequences through both and compare.
+    request-level physics — including per-call ``policy`` resolution with
+    the same cold/warm region keying (via the shared
+    :func:`~repro.core.select.session_collective`), so the
+    oracle-equivalence contract extends to policy-chosen algorithms.
+    Session-equivalence tests replay identical call sequences through both
+    and compare.
     """
 
-    def __init__(self, cfg: SimConfig):
+    def __init__(self, cfg: SimConfig, *, policy=None):
         self.cfg = cfg
+        self.policy = get_policy(policy)
+        self._warm_regions: set = set()
         self.t = 0.0
         self.records: List[CollectiveResult] = []
         self._targets: Dict[int, _RefTarget] = {}
@@ -221,6 +228,7 @@ class RefSession:
         if retention is not None and gap_ns >= retention:
             for tg in self._targets.values():
                 tg.state.flush()
+            self._warm_regions.clear()
 
     def _target(self, dst: int) -> _RefTarget:
         tg = self._targets.get(dst)
@@ -242,6 +250,10 @@ class RefSession:
         fab = cfg.fabric
         if gap_ns:
             self.idle(gap_ns)
+        collective = session_collective(
+            self.policy, cfg, nbytes, collective, n_gpus,
+            warm=base_offset in self._warm_regions)
+        self._warm_regions.add(base_offset)
         name, fab_n, step_specs, dsts = resolve_collective(
             cfg, nbytes, collective, n_gpus, rank_stride)
         rb = fab.request_bytes

@@ -41,6 +41,7 @@ from .engine import (EpochEngine, IterationResult, RunResult,
                      flows_for_dst)
 from .engine_vec import VecEngine, flows_from_specs, request_counts
 from .patterns import (get_pattern, simulated_dsts, simulated_dsts_arrays)
+from .select import get_policy, session_collective
 from .tlb import Counters
 from .topology import get_topology
 
@@ -162,14 +163,23 @@ class SimSession:
     kernel timings instead of the caller-supplied roofline value; ``None``
     (the default) leaves every ``gap_ns`` untouched — bit-for-bit the
     pre-calibration behavior.
+
+    ``policy`` (an :class:`~repro.core.select.AlgorithmPolicy` or a spec
+    string — see :func:`~repro.core.select.get_policy`) resolves *logical*
+    collective names per call, keyed on whether the call's ``base_offset``
+    region has been touched since the last retention flush (cold vs warm
+    Link-TLB state); ``None`` keeps the pre-policy behavior: only concrete
+    registry names are accepted.
     """
 
-    def __init__(self, cfg: SimConfig, *, compute_profile=None):
+    def __init__(self, cfg: SimConfig, *, compute_profile=None, policy=None):
         if cfg.engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {cfg.engine!r}; known: {ENGINES}")
         self.cfg = cfg
         self.compute_profile = compute_profile
+        self.policy = get_policy(policy)
+        self._warm_regions: set = set()   # base_offsets touched since flush
         self._vec = cfg.engine == "vectorized"
         self.t = 0.0
         self.records: List[CollectiveResult] = []
@@ -221,6 +231,7 @@ class SimSession:
         if retention is not None and gap_ns >= retention:
             for eng in self._engines.values():
                 eng.state.flush()
+            self._warm_regions.clear()
 
     # -- engines -------------------------------------------------------------
     def _engine(self, dst: int) -> EpochEngine:
@@ -259,6 +270,12 @@ class SimSession:
         gap_ns = self.resolve_gap(gap_ns, phase, window_parts)
         if gap_ns:
             self.idle(gap_ns)
+        # Policy resolution after the idle: a gap long enough to flush the
+        # TLBs demotes this region to cold before the algorithm is chosen.
+        collective = session_collective(
+            self.policy, cfg, nbytes, collective, n_gpus,
+            warm=base_offset in self._warm_regions)
+        self._warm_regions.add(base_offset)
         resolver = (resolve_collective_arrays if self._vec
                     else resolve_collective)
         name, fab_n, step_specs, dsts = resolver(

@@ -87,6 +87,10 @@ def main(argv=None) -> int:
     p.add_argument("--profile", default=None, metavar="FILE",
                    help="saved ComputeProfile JSON: calibrated compute "
                         "windows replace the rooflines (loaded jax-free)")
+    p.add_argument("--policy", default="fixed", metavar="SPEC",
+                   help="collective algorithm selection: fixed | auto | "
+                        "table:<path> (repro.core.select; fixed keeps the "
+                        "historical choices bit-for-bit)")
     p.add_argument("--per-step", action="store_true",
                    help="print the per-step trace CSV")
     fl = p.add_argument_group(
@@ -129,7 +133,7 @@ def main(argv=None) -> int:
         prefill_chunk_tokens=args.prefill_chunk,
         pretranslation=args.pretranslate, prefetch=args.prefetch,
         trace_path=args.trace, engine=args.engine,
-        profile_path=args.profile)
+        profile_path=args.profile, policy=args.policy)
     if args.fleet > 0:
         fp = FleetPoint(
             traffic=pt, replicas=args.fleet, router=args.router,

@@ -202,7 +202,8 @@ def simulate_fleet(arch, requests: List[Request], *,
                    max_decode_slots: int = 32,
                    prefill_chunk_tokens: int = 512,
                    steps_cap: Optional[int] = None,
-                   compute_profile=None) -> FleetResult:
+                   compute_profile=None,
+                   policy=None) -> FleetResult:
     """Serve ``requests`` on a fleet of identical pod replicas.
 
     ``pod``/``n_gpus``/``cfg`` describe **one replica** (exactly the
@@ -228,6 +229,10 @@ def simulate_fleet(arch, requests: List[Request], *,
     if router not in ROUTERS:
         raise ValueError(f"unknown router {router!r}; known: {ROUTERS}")
     mcfg, pod, cfg = resolve_traffic_pod(arch, pod, n_gpus, cfg)
+    # Resolve the policy spec once: every replica shares one policy object
+    # (an AutoPolicy's memoized candidate prices are fleet-wide that way).
+    from ..core.select import get_policy
+    policy = get_policy(policy)
     cap = max_replicas or replicas
     if autoscale:
         if not 1 <= min_replicas <= cap:
@@ -245,7 +250,7 @@ def simulate_fleet(arch, requests: List[Request], *,
                            max_decode_slots=max_decode_slots,
                            prefill_chunk_tokens=prefill_chunk_tokens,
                            compute_profile=compute_profile,
-                           start_ns=now_ns)
+                           start_ns=now_ns, policy=policy)
         return Replica(idx=idx, stream=stream, spun_up_ns=now_ns,
                        last_busy_ns=now_ns)
 
@@ -372,7 +377,8 @@ def _fleet_point(task: Tuple[FleetPoint]) -> FleetResult:
         spinup_latency_ns=fp.spinup_latency_ns,
         max_decode_slots=t.max_decode_slots,
         prefill_chunk_tokens=t.prefill_chunk_tokens,
-        steps_cap=t.steps_cap, compute_profile=t.load_profile())
+        steps_cap=t.steps_cap, compute_profile=t.load_profile(),
+        policy=t.policy)
 
 
 def sweep_fleet(points: Sequence[FleetPoint], *,

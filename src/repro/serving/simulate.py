@@ -208,7 +208,8 @@ class PodStream:
                  requests: List[Request], *,
                  max_decode_slots: int = 32,
                  prefill_chunk_tokens: int = 512,
-                 compute_profile=None, start_ns: float = 0.0):
+                 compute_profile=None, start_ns: float = 0.0,
+                 policy=None):
         self.mcfg, self.pod, self.cfg = mcfg, pod, cfg
         self.layout = serving_layout(
             mcfg, pod, max_decode_slots + prefill_chunk_tokens,
@@ -221,7 +222,10 @@ class PodStream:
         self.batcher = ContinuousBatcher(
             requests, max_decode_slots=max_decode_slots,
             prefill_chunk_tokens=prefill_chunk_tokens)
-        self.em = StepEmitter(mcfg, pod)
+        # The emitter resolves logical collectives per step; the trace it
+        # emits carries concrete names, so the session replays exactly the
+        # chosen algorithms (policy=None on the session side).
+        self.em = StepEmitter(mcfg, pod, policy=policy)
         self.steps: List[ServingStep] = []
 
     @property
@@ -260,8 +264,14 @@ class PodStream:
                 return None
             # Idle to the next arrival: ages (and beyond the retention
             # window, flushes) the warmed TLBs.  The ideal timeline waits
-            # for the same arrival.
-            self.sess.idle(nxt - self.sess.t)
+            # for the same arrival.  A flushing gap also resets the
+            # emitter's buffer-warmth view, so the first post-flush steps
+            # re-select cold-optimal algorithms.
+            gap = nxt - self.sess.t
+            self.sess.idle(gap)
+            retention = self.cfg.tlb_retention_ns
+            if retention is not None and gap >= retention:
+                self.em.mark_cold()
             self.ideal_clock = max(self.ideal_clock, nxt)
             return None
 
@@ -318,7 +328,8 @@ def simulate_traffic(arch, requests: List[Request], *,
                      max_decode_slots: int = 32,
                      prefill_chunk_tokens: int = 512,
                      steps_cap: Optional[int] = None,
-                     compute_profile=None) -> TrafficResult:
+                     compute_profile=None,
+                     policy=None) -> TrafficResult:
     """Serve ``requests`` on a simulated pod; returns per-request latencies.
 
     ``arch`` is a registry name (resolved without importing jax) or any
@@ -328,12 +339,14 @@ def simulate_traffic(arch, requests: List[Request], *,
     is mapped onto, exactly as workload replay does.  ``steps_cap`` bounds
     the number of engine steps (unfinished requests simply stay
     unfinished); percentiles are computed over served requests.
+    ``policy`` selects each step's collective algorithms
+    (:mod:`repro.core.select`; default fixed — bit-for-bit).
     """
     mcfg, pod, cfg = resolve_traffic_pod(arch, pod, n_gpus, cfg)
     stream = PodStream(mcfg, pod, cfg, requests,
                        max_decode_slots=max_decode_slots,
                        prefill_chunk_tokens=prefill_chunk_tokens,
-                       compute_profile=compute_profile)
+                       compute_profile=compute_profile, policy=policy)
     capped = False
     while not stream.drained:
         if steps_cap is not None and len(stream.steps) >= steps_cap:
@@ -384,6 +397,11 @@ class TrafficPoint:
     # serial executors resolve identical calibrated windows.  None keeps
     # the roofline windows (bit-for-bit the uncalibrated behavior).
     profile_path: Optional[str] = None
+    # Algorithm-selection policy spec ("fixed" | "auto" | "table:<path>",
+    # repro.core.select.get_policy) — a string so the point stays hashable;
+    # resolved inside whichever process prices the point, like
+    # profile_path.  "fixed" is bit-for-bit the pre-policy behavior.
+    policy: str = "fixed"
 
     def requests(self) -> List[Request]:
         kw = dict(prompt_mean=self.prompt_mean, output_mean=self.output_mean,
@@ -442,7 +460,8 @@ def _traffic_point(task: Tuple[TrafficPoint]) -> TrafficResult:
                             max_decode_slots=pt.max_decode_slots,
                             prefill_chunk_tokens=pt.prefill_chunk_tokens,
                             steps_cap=pt.steps_cap,
-                            compute_profile=pt.load_profile())
+                            compute_profile=pt.load_profile(),
+                            policy=pt.policy)
 
 
 def fan_out_points(points: Sequence, worker, *,

@@ -64,6 +64,10 @@ def main(argv=None) -> int:
                         "(loads JSON, measures nothing)")
     p.add_argument("--force-calibrate", action="store_true",
                    help="re-measure even when a cached profile exists")
+    p.add_argument("--policy", default="fixed", metavar="SPEC",
+                   help="collective algorithm selection: fixed | auto | "
+                        "table:<path> (repro.core.select; fixed keeps the "
+                        "historical choices bit-for-bit)")
     args = p.parse_args(argv)
 
     profile = None
@@ -84,7 +88,8 @@ def main(argv=None) -> int:
         args.arch, args.shape,
         pod=PodSpec(topology=args.topology, leaf_size=args.leaf,
                     oversubscription=args.oversub, pod_size=args.pod_size),
-        n_gpus=args.gpus, n_steps=args.steps, compute_profile=profile)
+        n_gpus=args.gpus, n_steps=args.steps, compute_profile=profile,
+        policy=args.policy)
     cfg = SimConfig(fabric=pod_fabric(trace.pod), engine=args.engine)
     if args.retention_ns is not None:
         cfg = cfg.replace(tlb_retention_ns=args.retention_ns)
@@ -98,10 +103,16 @@ def main(argv=None) -> int:
     mix = Counter()
     for c in trace.step_calls(0):
         mix[(c.collective, c.group, c.nbytes)] += 1
-    print("# per-step collective mix:")
+    print(f"# per-step collective mix (policy={args.policy}):")
     for (coll, group, nbytes), k in sorted(mix.items()):
         print(f"#   {k:4d} x {coll:<14s} {nbytes/2**20:9.2f} MB "
               f"over {group} GPUs")
+    if args.policy != "fixed":
+        prov = Counter((c.logical, c.collective, c.resolved_by)
+                       for c in trace.calls)
+        print("# policy resolutions (logical -> concrete, provenance):")
+        for (logical, coll, by), k in sorted(prov.items()):
+            print(f"#   {k:4d} x {logical:<14s} -> {coll:<18s} [{by}]")
 
     rep = replay(trace, cfg=cfg)
     print("step,comm_us,ideal_us,degradation,walks,requests")

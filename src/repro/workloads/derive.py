@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, List, Optional
 
 from ..core.config import FabricConfig
+from ..core.select import get_policy
 from ..core.topology import get_topology
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -92,7 +93,7 @@ class CollectiveCall:
     """One collective of the derived sequence."""
 
     label: str          # e.g. "tok0/L3/moe_dispatch"
-    collective: str     # pattern registry name
+    collective: str     # concrete pattern registry name (resolved)
     nbytes: int         # per-GPU buffer size (pattern semantics)
     group: int          # participating GPU count
     compute_ns: float   # compute window preceding this collective
@@ -114,6 +115,12 @@ class CollectiveCall:
     # derive-time application bit-for-bit even when tp == 1 folds several
     # sublayer windows into one gap.  Empty when the gap is zero.
     window_parts: tuple = ()
+    # Resolution provenance (DESIGN.md §14): the *logical* collective the
+    # emitter requested ("allreduce", "all_to_all", ...) and which policy
+    # decision resolved it to ``collective`` ("fixed", "auto:cold",
+    # "table:warm", ...).  Empty strings on hand-built traces.
+    logical: str = ""
+    resolved_by: str = ""
 
 
 @dataclass
@@ -268,22 +275,46 @@ class StepEmitter:
     re-resolvable against a compute profile at replay time.  The pending
     state persists across :meth:`step` calls, exactly as a session clock
     would.
+
+    Collectives are requested *logically* ("allreduce", "all_to_all", ...)
+    and resolved to a concrete algorithm by ``policy`` (an
+    :class:`~repro.core.select.AlgorithmPolicy` or spec string; default
+    fixed — bit-for-bit the historical hard-coded choices).  Resolution is
+    keyed on the logical buffer's TLB state: the first emission on a buffer
+    since the last :meth:`mark_cold` resolves as cold, repeats as warm —
+    the serving layer calls :meth:`mark_cold` whenever an idle gap crosses
+    the retention window, so post-flush steps re-select cold-optimal
+    algorithms.
     """
 
-    def __init__(self, cfg: "ModelConfig", pod: PodSpec, window=None):
+    def __init__(self, cfg: "ModelConfig", pod: PodSpec, window=None,
+                 policy=None):
         from .calibrate import ffn_phase, mixer_phase   # pure-python helpers
         self.cfg = cfg
         self.pod = pod
         # window(phase, roofline_ns) -> ns: profile resolution hook.
         self.window = window if window is not None else (lambda ph, ns: ns)
+        self.policy = get_policy(policy) or get_policy("fixed")
+        self._fab = pod_fabric(pod)
+        self._warm_buffers: set = set()
         self.calls: List[CollectiveCall] = []
         self._mixer_phase = mixer_phase
         self._ffn_phase = ffn_phase
         self._pending_ns = 0.0
         self._pending_parts: List[tuple] = []
 
+    def mark_cold(self) -> None:
+        """Forget buffer warmth (the emitter-side mirror of a TLB flush)."""
+        self._warm_buffers.clear()
+
     def emit(self, label, collective, nbytes, group, compute_ns, buffer,
              step, phase="", stride=1):
+        fab_g = (self._fab if group == self._fab.n_gpus
+                 else dataclasses.replace(self._fab, n_gpus=group))
+        res = self.policy.resolve(
+            collective, nbytes, fab_g,
+            state="warm" if buffer in self._warm_buffers else "cold")
+        self._warm_buffers.add(buffer)
         parts = list(self._pending_parts)
         if compute_ns or phase:
             parts.append((phase, compute_ns))
@@ -292,10 +323,11 @@ class StepEmitter:
         if self._pending_ns:
             phase = ""
         self.calls.append(CollectiveCall(
-            label, collective, nbytes, group,
+            label, res.collective, nbytes, group,
             compute_ns=compute_ns + self._pending_ns, buffer=buffer,
             step=step, phase=phase, window_parts=tuple(parts),
-            stride=stride))
+            stride=stride, logical=res.logical,
+            resolved_by=res.provenance))
         self._pending_ns = 0.0
         self._pending_parts = []
 
@@ -358,7 +390,8 @@ class StepEmitter:
 def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
                     n_gpus: Optional[int] = None,
                     n_steps: int = 1,
-                    compute_profile=None) -> WorkloadTrace:
+                    compute_profile=None,
+                    policy=None) -> WorkloadTrace:
     """Derive the collective sequence of ``n_steps`` model steps.
 
     ``arch`` is a registry name (``"qwen3-moe-235b-a22b"``) or a
@@ -372,6 +405,12 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
     for this exact ``(arch, shape, pod)``) replaces the roofline compute
     windows with the profile's measured-and-calibrated per-phase windows;
     ``None`` (the default) keeps the roofline bit-for-bit.
+
+    ``policy`` selects the concrete algorithm per logically-requested
+    collective (:mod:`repro.core.select`); ``None``/``"fixed"`` reproduces
+    the historical hard-coded choices bit-for-bit, and each emitted
+    :class:`CollectiveCall` records the logical name plus the resolving
+    decision (``logical``/``resolved_by``).
     """
     if isinstance(arch, str):
         from ..configs import get_config            # jax-free registry
@@ -407,7 +446,7 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
 
     trace = WorkloadTrace(arch=cfg.name, shape=shape, pod=pod,
                           tokens_per_step=t_step, n_microbatches=n_micro)
-    em = StepEmitter(cfg, pod, window=window)
+    em = StepEmitter(cfg, pod, window=window, policy=policy)
     trace.calls = em.calls
     for step in range(n_steps):
         em.step(step, t_step, flop_mult=flop_mult)
@@ -423,6 +462,6 @@ def derive_workload(arch, shape: str, *, pod: Optional[PodSpec] = None,
             grad_stride = tp if pod.topology != "single_clos" else 1
             for i in range(cfg.n_layers):
                 nb = max(1, layer_param_bytes(cfg, i, pod.grad_bytes) // tp)
-                em.emit(f"s{step}/L{i}/grad_ar", "ring_allreduce", nb, dp,
+                em.emit(f"s{step}/L{i}/grad_ar", "allreduce", nb, dp,
                         0.0, f"grad_l{i}", step, stride=grad_stride)
     return trace

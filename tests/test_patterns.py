@@ -79,6 +79,23 @@ def test_flow_sets_move_analytic_volume(name, n):
 
 
 @pytest.mark.parametrize("name", ALL_PATTERNS)
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_steps_arrays_conserve_analytic_volume(name, n):
+    # The columnar schedule (what the vectorized engine consumes) must move
+    # exactly the same bytes per step as the object form — the conservation
+    # contract holds in both representations.
+    fab = FabricConfig(n_gpus=n)
+    nbytes = 8 * MB
+    pattern = get_pattern(name)
+    arrays = pattern.steps_arrays(nbytes, fab)
+    obj = pattern.steps(nbytes, fab)
+    assert [int(st.nbytes.sum()) for st in arrays] \
+        == [sum(s.nbytes for s in step) for step in obj]
+    assert sum(int(st.nbytes.sum()) for st in arrays) \
+        == analytic_volume(name, nbytes, fab)
+
+
+@pytest.mark.parametrize("name", ALL_PATTERNS)
 def test_request_conservation_through_engine(name):
     cfg = paper_config(16).replace(collective=name)
     r = simulate(2 * MB, cfg)
