@@ -49,11 +49,11 @@ def figures() -> int:
 # points where the O(n^2) flow-materialization cost that motivated the
 # vectorized engine dominates (ROADMAP: fig14-scale sweeps).  The special
 # ("fleet", 16, 0) point times an autoscaled fleet serving run
-# (repro.serving.fleet) on the event engine — the serving stack's wall
-# time is gated like any other point, but it carries no wall_vec_s: its
-# collectives are far below the size where vectorization wins, so a
-# vec-vs-event rule there would gate scheduler overhead, not the engine
-# (one untimed vectorized run still cross-checks engine agreement).
+# (repro.serving.fleet) on BOTH engines: its tiny decode collectives sat
+# below the vectorization-win size until the serving hot path (geometry
+# memoization + warm fast path, DESIGN.md §15) made the vectorized engine
+# win at serving scale too, so it is now dual-engine and folded into the
+# aggregate speedup like any other point.
 def _bench_points():
     from repro.core import GB, MB
     return [
@@ -79,33 +79,77 @@ def _fleet_bench_point(engine: str):
                       scale_up_queued=1, scale_down_idle_ns=5e7)
 
 
-def _measure_fleet(n_gpus: int, reps: int) -> dict:
-    """Time the fleet serving point (event engine), cross-check engines."""
+def _measure_fleet(n_gpus: int, reps: int, profile: bool = False) -> dict:
+    """Time the fleet serving point on BOTH engines, interleaved best-of.
+
+    Event and vectorized reps alternate so both engines sample the same
+    scheduler-noise environment (shared boxes show 20-30% wall drift
+    between measurement windows; pairing keeps the recorded speedup
+    honest).  The two runs must agree bit-for-bit on every step — the
+    serving stack doubles as a coarse differential check, exactly like
+    the grid points.
+    """
     from repro.serving.fleet import _fleet_point
 
-    wall = float("inf")
+    walls = {"event": float("inf"), "vectorized": float("inf")}
+    results = {}
     for _ in range(reps):
-        t0 = time.perf_counter()
-        res = _fleet_point((_fleet_bench_point("event"),))
-        wall = min(wall, time.perf_counter() - t0)
-    vec = _fleet_point((_fleet_bench_point("vectorized"),))
+        for eng in ("event", "vectorized"):
+            t0 = time.perf_counter()
+            results[eng] = _fleet_point((_fleet_bench_point(eng),))
+            walls[eng] = min(walls[eng], time.perf_counter() - t0)
+    res, vec = results["event"], results["vectorized"]
     key = [(s.t_start, s.t_end, s.comm_ns, s.walks) for s in res.steps]
     if key != [(s.t_start, s.t_end, s.comm_ns, s.walks)
                for s in vec.steps]:
         raise AssertionError(
             "engine disagreement on the fleet serving point")
+    if profile:
+        for eng in ("event", "vectorized"):
+            _profile_point(f"fleet/gpus{n_gpus}/serving [{eng}]",
+                           lambda e=eng: _fleet_point(
+                               (_fleet_bench_point(e),)))
     comm = sum(s.comm_ns for s in res.steps)
-    print(f"# fleet/gpus{n_gpus}/serving: event {wall:.3f}s "
-          f"({len(res.steps)} steps, {res.spin_ups} spin-ups, "
+    speedup = walls["event"] / walls["vectorized"]
+    print(f"# fleet/gpus{n_gpus}/serving: event {walls['event']:.3f}s, "
+          f"vec {walls['vectorized']:.3f}s ({speedup:.1f}x, "
+          f"{len(res.steps)} steps, {res.spin_ups} spin-ups, "
+          f"fastpath {vec.fastpath_step_fraction:.0%} of steps, "
           f"p99_deg={res.p99_ttft_degradation:.4f})", file=sys.stderr)
     return {"topology": "fleet", "n_gpus": n_gpus, "nbytes": 0,
-            "wall_s": round(wall, 4),
+            "wall_s": round(walls["event"], 4),
+            "wall_vec_s": round(walls["vectorized"], 4),
+            "speedup": round(speedup, 2),
             "completion_ns": round(comm, 2),
             "degradation": res.p99_ttft_degradation,
             "requests": len(res.requests)}
 
 
-def measure_engine(reps: int = 3) -> dict:
+def _profile_point(name: str, fn) -> None:
+    """Run ``fn`` once under cProfile; print the top-15 cumulative table.
+
+    Emitted on stderr as ``#``-prefixed lines so a profiled bench run
+    still produces a machine-readable JSON/CSV stream on stdout.
+    """
+    import cProfile
+    import io
+    import pstats
+
+    pr = cProfile.Profile()
+    pr.enable()
+    fn()
+    pr.disable()
+    buf = io.StringIO()
+    st = pstats.Stats(pr, stream=buf)
+    st.sort_stats("cumulative").print_stats(15)
+    print(f"# --- profile {name}: top 15 by cumulative time ---",
+          file=sys.stderr)
+    for line in buf.getvalue().splitlines():
+        if line.strip():
+            print(f"#   {line}", file=sys.stderr)
+
+
+def measure_engine(reps: int = 3, profile: bool = False) -> dict:
     """Time the fixed grid on both engines; returns the JSON payload.
 
     Each point is best-of-``reps`` per engine: the minimum wall time is the
@@ -122,7 +166,7 @@ def measure_engine(reps: int = 3) -> dict:
     t_all = time.perf_counter()
     for topo, n, nbytes in _bench_points():
         if topo == "fleet":
-            points.append(_measure_fleet(n, reps))
+            points.append(_measure_fleet(n, reps, profile=profile))
             continue
         fab = FabricConfig(n_gpus=n, topology=topo, leaf_size=16,
                            oversubscription=2.0, pod_size=16)
@@ -137,6 +181,10 @@ def measure_engine(reps: int = 3) -> dict:
                 wall = min(wall, time.perf_counter() - t0)
             walls[eng] = wall
             results[eng] = c
+            if profile:
+                _profile_point(
+                    f"{topo}/gpus{n}/{nbytes >> 20}MB [{eng}]",
+                    lambda: ratsim.compare(nbytes, n, cfg=cfg))
         ce = results["event"].baseline
         cv = results["vectorized"].baseline
         if (ce.completion_ns != cv.completion_ns
@@ -161,8 +209,10 @@ def measure_engine(reps: int = 3) -> dict:
               f"event {walls['event']:.3f}s, "
               f"vec {walls['vectorized']:.3f}s ({speedup:.1f}x, "
               f"deg={c.degradation:.4f})", file=sys.stderr)
-    # Aggregate speedup is a *collective-engine* headline: dual-engine
-    # points only (the fleet serving point has no vectorized wall).
+    # Aggregate speedup over every dual-engine point — since the serving
+    # hot path this includes the fleet serving point, so the headline now
+    # covers scheduler-driven small-collective replay, not just pod-scale
+    # collectives (which is why it is lower than the pre-serving 20x).
     dual = [p for p in points if "wall_vec_s" in p]
     tot_e = sum(p["wall_s"] for p in dual)
     tot_v = sum(p["wall_vec_s"] for p in dual)
@@ -257,6 +307,11 @@ def main() -> None:
                         "artifact instead of printing the figure CSV")
     p.add_argument("--out", default="BENCH_engine.json",
                    help="output path for --bench-engine")
+    p.add_argument("--profile", action="store_true",
+                   help="with --bench-engine: run each grid point once "
+                        "more under cProfile and print a per-point top-15 "
+                        "cumulative hotspot table on stderr, so perf work "
+                        "can cite measured hotspots")
     p.add_argument("--check-against", default=None, metavar="BASELINE",
                    help="gate the engine grid against this committed "
                         "baseline JSON (fails on per-point wall-time "
@@ -283,13 +338,19 @@ def main() -> None:
         if args.current:
             p.error("--current requires --check-against or "
                     "--update-baseline (it would otherwise be ignored)")
+        if args.profile:
+            p.error("--profile requires --bench-engine (the figure CSV "
+                    "path does not run the grid)")
         sys.exit(figures())
 
     if args.current:
+        if args.profile:
+            p.error("--profile needs a live measurement; it cannot "
+                    "profile a pre-measured --current JSON")
         with open(args.current) as f:
             payload = json.load(f)
     else:
-        payload = measure_engine()
+        payload = measure_engine(profile=args.profile)
         if args.bench_engine:
             with open(args.out, "w") as f:
                 json.dump(payload, f, indent=2)

@@ -75,6 +75,9 @@ class RunResult:
     trace: Optional[np.ndarray] = None
     trace_flow_bounds: Optional[List[int]] = None
     mean_stall_ns: float = 0.0
+    # run_iteration calls fully served by the vectorized warm fast path
+    # (DESIGN.md §15.2); always 0 on the event engine.
+    fastpath_calls: int = 0
 
     @property
     def completion_ns(self) -> float:

@@ -89,14 +89,18 @@ class Topology:
                            dtype=np.int64, count=len(src))
 
     def path_latency_arr(self, src: np.ndarray, dst) -> np.ndarray:
-        """``path_latency_ns(src[i], dst)`` for an index array."""
-        return np.fromiter((self.path_latency_ns(int(s), int(dst))
-                            for s in src), dtype=np.float64, count=len(src))
+        """``path_latency_ns(src[i], dst[i])`` (scalar dst broadcasts)."""
+        dst_b = np.broadcast_to(np.asarray(dst, dtype=np.int64), src.shape)
+        return np.fromiter((self.path_latency_ns(int(s), int(d))
+                            for s, d in zip(src, dst_b)),
+                           dtype=np.float64, count=len(src))
 
     def return_latency_arr(self, dst, src: np.ndarray) -> np.ndarray:
-        """``return_latency_ns(dst, src[i])`` for an index array."""
-        return np.fromiter((self.return_latency_ns(int(dst), int(s))
-                            for s in src), dtype=np.float64, count=len(src))
+        """``return_latency_ns(dst[i], src[i])`` (scalar dst broadcasts)."""
+        dst_b = np.broadcast_to(np.asarray(dst, dtype=np.int64), src.shape)
+        return np.fromiter((self.return_latency_ns(int(d), int(s))
+                            for d, s in zip(dst_b, src)),
+                           dtype=np.float64, count=len(src))
 
     # -- group structure ---------------------------------------------------
     def tier0_group(self) -> int:
@@ -192,11 +196,13 @@ class _BlockTopology(Topology):
         return (src // self.block != dst_b // self.block).astype(np.int64)
 
     def path_latency_arr(self, src, dst):
-        intra = src // self.block == int(dst) // self.block
+        dst_b = np.asarray(dst, dtype=np.int64)
+        intra = src // self.block == dst_b // self.block
         return np.where(intra, self.fab.oneway_ns, self._inter_ns)
 
     def return_latency_arr(self, dst, src):
-        intra = src // self.block == int(dst) // self.block
+        dst_b = np.asarray(dst, dtype=np.int64)
+        intra = src // self.block == dst_b // self.block
         return np.where(intra, self.fab.return_ns, self._inter_ns)
 
     def tier0_group(self) -> int:

@@ -164,6 +164,7 @@ class FleetResult(ServingAggregates):
                 retired_ns=rep.retired_ns, routed=rep.routed,
                 steps=len(steps),
                 walks=sum(s.walks for s in steps),
+                fastpath_calls=sum(s.fastpath_calls for s in steps),
                 cold_comm_ns=cold, warm_comm_ns=warm))
         return rows
 

@@ -57,6 +57,9 @@ class ServingStep:
     ideal_comm_ns: float
     compute_ns: float
     walks: int
+    # Vectorized-engine warm-fast-path engagements while pricing this step
+    # (0 on the event engine, which has no fast path to engage).
+    fastpath_calls: int = 0
 
     @property
     def degradation(self) -> float:
@@ -133,6 +136,24 @@ class ServingAggregates:
     @property
     def cold_steps(self) -> int:
         return sum(1 for s in self.steps if s.walks > 0)
+
+    # Warm-fast-path engagement (vectorized engine only; the event engine
+    # reports 0 everywhere and the fraction is 0.0).
+    @property
+    def fastpath_calls(self) -> int:
+        return sum(s.fastpath_calls for s in self.steps)
+
+    @property
+    def fastpath_step_fraction(self) -> float:
+        """Fraction of priced steps where the warm fast path engaged.
+
+        Steady-state decode traffic on the vectorized engine should sit
+        near 1.0; prefill chunks and post-flush steps are the misses.
+        """
+        if not self.steps:
+            return float("nan")
+        return (sum(1 for s in self.steps if s.fastpath_calls > 0)
+                / len(self.steps))
 
 
 @dataclass
@@ -292,7 +313,7 @@ class PodStream:
         em.step(len(self.steps), plan.total_tokens,
                 prefix=f"t{len(self.steps)}")
         comm = ideal_comm = compute = 0.0
-        walks = 0
+        walks = fastpath = 0
         for c in em.calls[base:]:
             kw = dict(collective=c.collective, n_gpus=c.group,
                       rank_stride=c.stride, gap_ns=c.compute_ns,
@@ -301,6 +322,7 @@ class PodStream:
             rec = sess.run(c.nbytes, **kw)
             comm += rec.completion_ns
             walks += rec.counters.walks
+            fastpath += rec.fastpath_calls
             compute += sess.resolve_gap(c.compute_ns, c.phase,
                                         c.window_parts)
             sig = (c.collective, c.nbytes, c.group, c.stride)
@@ -314,7 +336,7 @@ class PodStream:
             decode_tokens=plan.decode_tokens,
             prefill_tokens=plan.prefill_tokens,
             comm_ns=comm, ideal_comm_ns=ideal_comm, compute_ns=compute,
-            walks=walks)
+            walks=walks, fastpath_calls=fastpath)
         self.steps.append(step)
         self.batcher.commit(plan, sess.t, self.ideal_clock, comm,
                             ideal_comm, walks)

@@ -309,6 +309,36 @@ class TestRetentionContract:
         assert min(cold) > max(warm)
 
 
+# ------------------------------------------------- warm-fast-path engagement
+class TestWarmFastPath:
+    """DESIGN.md §15.2: steady-state decode runs all-warm on the vec engine.
+
+    Acceptance criterion for the serving hot path: once prefill is done and
+    the Link-TLBs hold every decode page, the vectorized warm fast path
+    should serve essentially every step — surfaced per step through
+    ``ServingStep.fastpath_calls``.
+    """
+
+    def _run(self, engine):
+        cfg = SimConfig(fabric=pod_fabric(resolve_pod(
+            PodSpec(n_gpus=16), TINY, "decode")), engine=engine)
+        # One long-decode request: a single prefill chunk, then ~63 pure
+        # decode steps re-touching the same warmed pages.
+        reqs = tiny_requests([0.0], prompt=16, output=64)
+        return simulate_traffic(TINY, reqs, n_gpus=16, cfg=cfg)
+
+    def test_steady_state_decode_engages_fastpath(self):
+        res = self._run("vectorized")
+        assert len(res.steps) > 20
+        assert res.fastpath_step_fraction > 0.9
+        assert res.fastpath_calls > 0
+
+    def test_event_engine_reports_zero(self):
+        res = self._run("event")
+        assert res.fastpath_calls == 0
+        assert res.fastpath_step_fraction == 0.0
+
+
 # ----------------------------------------------------------------- sweeps
 class TestSweepDeterminism:
     def _points(self):

@@ -1,0 +1,125 @@
+"""Direct unit tests for ``repro.core.engine_vec._VLRU`` internals.
+
+The differential/fuzz tiers prove ``_VLRU`` end-to-end against the event
+engine's ``LRUCache``, but two of its invariants deserve targeted coverage
+because their failure modes are silent recency corruption rather than a
+timing mismatch a diff run is guaranteed to trip over:
+
+* **stale-heap-generation skip** — a re-staged (earlier) fill leaves the
+  superseded heap entry in place; when it finally pops, the
+  ``staged.get(k) != (ft, seq)`` check must drop it without touching the
+  set (a spurious ``move_to_end`` would silently reorder evictions);
+* **cross-set isolation** — keys hash to ``hash(k) % n_sets`` independent
+  sets; pressure in one set must never evict or reorder another.
+
+Plus the two contracts the warm fast path builds on: ``resident`` mirrors
+the union of the set dicts exactly, and the shared mutation-epoch cell
+bumps on staging/commit but never on recency-only hits.
+"""
+from repro.core.engine_vec import _VLRU
+
+
+def _set_keys(c):
+    return [list(s) for s in c._sets]
+
+
+class TestRestagedFills:
+    def test_later_refill_ignored(self):
+        c = _VLRU(entries=4, assoc=4)
+        c.fill("k", 5.0)
+        c.fill("k", 9.0)            # later fill of a staged page: no-op
+        assert c._staged["k"] == (5.0, 0)
+        assert len(c._heap) == 1    # no superseded entry pushed
+        assert c.lookup("k", 6.0)   # committed at its original time
+        assert not c.lookup("q", 4.0)
+
+    def test_stale_entry_skipped_without_recency_touch(self):
+        # Re-staging "a" earlier supersedes its t=10 heap entry.  When the
+        # stale entry pops later it must be dropped; a buggy commit would
+        # move_to_end("a") at t=10, flipping the LRU order.
+        c = _VLRU(entries=2, assoc=2)      # one set
+        c.fill("a", 10.0)
+        c.fill("a", 5.0)                   # earlier re-fill supersedes
+        c.fill("b", 6.0)
+        assert c.lookup("b", 7.0)          # commits a@5 then b@6
+        assert c.resident == {"a", "b"}
+        # Recency now [a, b] (b touched last).  Popping the stale a@10
+        # entry must not promote "a".
+        assert not c.lookup("zz", 11.0)    # drains the stale entry
+        c.fill("d", 12.0)
+        c._commit(13.0)                    # set full: evicts LRU
+        assert c.resident == {"b", "d"}    # "a" was LRU and went
+        assert c.lookup("b", 14.0) and not c.lookup("a", 14.0)
+
+    def test_earlier_refill_keeps_staging_index(self):
+        # An earlier re-fill keeps the original staging index, exactly as
+        # a dict value update keeps the key's position: on a fill-time
+        # tie, first-staged commits (and therefore evicts) first.
+        c = _VLRU(entries=2, assoc=2)
+        c.fill("a", 10.0)                  # staged first (seq 0)
+        c.fill("b", 8.0)                   # seq 1
+        c.fill("a", 8.0)                   # ties b's time, keeps seq 0
+        c._commit(9.0)                     # inserts a (seq 0) then b
+        c.fill("d", 20.0)
+        c._commit(21.0)                    # evicts the LRU: "a"
+        assert c.resident == {"b", "d"}
+
+
+class TestCrossSetBehavior:
+    # Small-int hash is identity, so with n_sets=2 even keys share set 0
+    # and odd keys set 1 — a deterministic collision layout.
+    def test_pressure_is_per_set(self):
+        c = _VLRU(entries=4, assoc=2)      # 2 sets x 2 ways
+        for k, t in ((0, 1.0), (2, 2.0), (1, 3.0)):
+            c.fill(k, t)
+        c._commit(4.0)
+        assert _set_keys(c) == [[0, 2], [1]]
+        c.fill(4, 5.0)                     # set 0 overflows
+        c._commit(6.0)
+        # Set 0 evicted its own LRU (0); set 1 untouched.
+        assert _set_keys(c) == [[2, 4], [1]]
+        assert c.resident == {2, 4, 1}
+        assert not c.lookup(0, 7.0) and c.lookup(1, 7.0)
+
+    def test_recency_is_per_set(self):
+        c = _VLRU(entries=4, assoc=2)
+        for k, t in ((0, 1.0), (2, 2.0), (1, 3.0), (3, 4.0)):
+            c.fill(k, t)
+        c._commit(5.0)
+        assert c.lookup(0, 6.0)            # promote 0 within set 0 only
+        c.fill(4, 7.0)                     # set 0 overflow evicts 2
+        c.fill(5, 8.0)                     # set 1 overflow evicts 1
+        c._commit(9.0)
+        assert c.resident == {0, 4, 3, 5}
+
+    def test_resident_mirrors_sets_exactly(self):
+        c = _VLRU(entries=4, assoc=2)
+        for k in range(10):
+            c.fill(k, float(k))
+            c._commit(k + 0.5)
+            assert c.resident == {k for s in c._sets for k in s}
+        assert len(c.resident) == 4        # both sets at capacity
+
+
+class TestMutationEpoch:
+    # The warm fast path proves "nothing changed since last observed" via
+    # the shared epoch cell: staging and commit batches bump it, recency
+    # moves must not (they never change a fast-path verdict).
+    def test_fill_and_commit_bump(self):
+        mut = [0]
+        c = _VLRU(entries=2, assoc=2, mut=mut)
+        c.fill("a", 1.0)
+        assert mut[0] == 1
+        c._commit(2.0)
+        assert mut[0] == 2
+
+    def test_recency_only_lookup_does_not_bump(self):
+        mut = [0]
+        c = _VLRU(entries=2, assoc=2, mut=mut)
+        c.fill("a", 1.0)
+        c._commit(2.0)
+        before = mut[0]
+        assert c.lookup("a", 3.0)          # hit: recency move only
+        assert not c.lookup("x", 3.0)      # miss, nothing staged
+        c._commit(4.0)                     # empty heap: early return
+        assert mut[0] == before
