@@ -642,6 +642,126 @@ def fig17_algorithm_selection() -> List[Row]:
     return rows
 
 
+# fig18 disaggregation grid: the fig15 arch with prompts pinned near the
+# 4096-token cap (prompt_mean far above it, so ~80% of shards are the full
+# ~12.6MB and the decode pod's KV arena ring wraps within the stream —
+# transfers reach their steady-state regime), short outputs so the decode
+# pods drain within the step budget.  The vectorized engine is bit-for-bit
+# the event engine (proven by the tier-1 differential tests) and ~10x
+# faster for a benchmark this wide.
+_FIG18_BASE = dict(arch="granite-moe-1b-a400m", n_requests=32, seed=7,
+                   prompt_mean=16384, output_mean=8, engine="vectorized")
+_FIG18_TOPOS = {
+    "single_clos": {},
+    "two_tier": dict(topology="two_tier", leaf_size=8, oversubscription=2.0),
+}
+_FIG18_RPS = (4.0, 16.0)
+_FIG18_SMALL_L2 = 8
+# L2-axis arena: 6 full-prompt slots (84MB) — several ring laps within 32
+# requests.  At the Table-1 L2 (512 x 2MB = 1GB reach) the whole arena
+# stays resident after lap 1; at 8 entries (16MB reach) steady-state
+# transfers keep re-walking.
+_FIG18_ARENA = 6 * 14 * MB
+
+
+def fig18_disaggregation() -> List[Row]:
+    """Fig 18 (ours, beyond the paper): prefill/decode disaggregation.
+
+    Disaggregated serving (repro.serving.disagg, DESIGN.md §16) routes
+    every request through an explicit KV-cache transfer across the
+    ``multi_pod`` scale-out hop, priced at the decode pod's Link-MMU —
+    TTFT gains a reverse-translation term the colocated deployment never
+    pays.  The grid crosses rps x topology for colocated-vs-disagg TTFT
+    and ITL percentiles (the crossover is reported as measured — disagg
+    wins only where prefill/decode interference outweighs the hop), and
+    an L2-reach axis isolates the two-regime claim: with the Table-1 L2
+    the transfer working set stays resident and the cold-RAT excess is
+    <2% of TTFT; shrinking the L2 below the KV shard's page footprint
+    makes every transfer re-walk, and the excess becomes visible in the
+    TTFT decomposition.
+    """
+    from repro.serving import TrafficPoint, sweep_traffic
+    from repro.serving.disagg import DisaggPoint, sweep_disagg
+
+    co_pts, dg_pts = {}, {}
+    for rps in _FIG18_RPS:
+        for topo, kw in _FIG18_TOPOS.items():
+            t = TrafficPoint(rps=rps, **kw, **_FIG18_BASE)
+            name = f"{topo}/rps{rps:g}"
+            co_pts[name] = t
+            dg_pts[name] = DisaggPoint(traffic=t)
+    for l2, tag in ((_FIG18_SMALL_L2, f"l2_{_FIG18_SMALL_L2}"),
+                    (0, "l2_default")):
+        dg_pts[f"{tag}/rps16"] = DisaggPoint(
+            traffic=TrafficPoint(rps=16.0, l2_entries=l2, **_FIG18_BASE),
+            kv_arena_bytes=_FIG18_ARENA)
+    co = sweep_traffic(list(co_pts.values()))
+    dg = sweep_disagg(list(dg_pts.values()))
+
+    def steady_cold(r):
+        # Handoffs landing at an already-visited arena offset: their pages
+        # were translated a lap ago, so any walk is a reach/retention
+        # re-walk, not first-contact warmup.
+        seen, cold = set(), 0
+        for h in sorted(r.handoffs, key=lambda h: h.start_ns):
+            if h.offset in seen and h.walks > 0:
+                cold += 1
+            seen.add(h.offset)
+        return cold
+
+    rows = []
+    frac = {}
+    for name, dp in dg_pts.items():
+        r = dg[dp]
+        ttft = r.ttft_percentiles()
+        itl = r.itl_percentiles()
+        bd = r.ttft_breakdown()
+        frac[name] = bd["kv_excess_ns"] / bd["ttft_ns"]
+        rows.append((f"fig18/disagg/{name}", ttft[50.0] / 1e3,
+                     f"ttft_p99_us={ttft[99.0]/1e3:.1f};"
+                     f"itl_p50_us={itl[50.0]/1e3:.2f};"
+                     f"prefill_us={bd['prefill_ns']/1e3:.1f};"
+                     f"kv_transfer_us={bd['kv_transfer_ns']/1e3:.2f};"
+                     f"kv_excess_us={bd['kv_excess_ns']/1e3:.2f};"
+                     f"decode_wait_us={bd['decode_wait_ns']/1e3:.1f};"
+                     f"kv_excess_frac={frac[name]:.5f};"
+                     f"cold_handoffs={r.kv_cold_handoffs};"
+                     f"steady_cold={steady_cold(r)};"
+                     f"kv_walks={r.kv_walks}"))
+    for name, tp in co_pts.items():
+        r = co[tp]
+        ttft = r.ttft_percentiles()
+        itl = r.itl_percentiles()
+        d = dg[dg_pts[name]].ttft_percentiles()
+        rows.append((f"fig18/colocated/{name}", ttft[50.0] / 1e3,
+                     f"ttft_p99_us={ttft[99.0]/1e3:.1f};"
+                     f"itl_p50_us={itl[50.0]/1e3:.2f};"
+                     f"disagg_ttft_p50_us={d[50.0]/1e3:.1f};"
+                     f"disagg_wins_p50={d[50.0] < ttft[50.0]}"))
+    # Two-regime split: at default L2 reach the whole arena is resident
+    # after lap 1 — repeat-offset transfers never walk again; at small
+    # reach the steady state keeps re-walking and the cold excess recurs.
+    # (The excess stays a tiny fraction of TTFT in both regimes: a multi-MB
+    # KV transfer amortizes its walks exactly like the paper's large
+    # collectives — the split is in the *recurrence*, and the warm-reach
+    # fraction bound is the honest "vanishes" criterion.)
+    small_r = dg[dg_pts[f"l2_{_FIG18_SMALL_L2}/rps16"]]
+    default_r = dg[dg_pts["l2_default/rps16"]]
+    small, default = frac[f"l2_{_FIG18_SMALL_L2}/rps16"], \
+        frac["l2_default/rps16"]
+    rows.append(("fig18/check_two_regime_split", 0.0,
+                 f"small_l2_excess_frac={small:.6f};"
+                 f"default_excess_frac={default:.6f};"
+                 f"small_l2_steady_cold={steady_cold(small_r)};"
+                 f"default_steady_cold={steady_cold(default_r)};"
+                 f"small_l2_walks={small_r.kv_walks};"
+                 f"default_walks={default_r.kv_walks};"
+                 f"cold_recurs_at_small_reach="
+                 f"{steady_cold(small_r) > steady_cold(default_r)};"
+                 f"vanishes_at_default_reach={default < 0.02}"))
+    return rows
+
+
 def sched_costmodel() -> List[Row]:
     """Framework integration: cost model accuracy + warm-up chunk plans."""
     from repro.core.cost_model import CostModel
@@ -665,5 +785,6 @@ ALL = [fig4_overhead, fig5_latency, fig6_breakdown, fig7_hier, fig8_hum,
        fig9_10_traces, fig11_l2_sweep, fig12_collective_sweep,
        fig13_workload_replay, fig13_workload_replay_calibrated,
        fig14_topology_scaling, fig15_serving_tail_latency,
-       fig16_fleet_scaling, fig17_algorithm_selection, opt_pretranslation,
-       opt_prefetch, sched_costmodel]
+       fig16_fleet_scaling, fig17_algorithm_selection,
+       fig18_disaggregation, opt_pretranslation, opt_prefetch,
+       sched_costmodel]

@@ -431,6 +431,74 @@ class MultiPodAllToAll(HierarchicalAllToAll):
         return get_topology(fab).pod_group()
 
 
+def kv_block(fab: FabricConfig) -> int:
+    """Prefill-side GPU count of the KV-transfer pair (DESIGN.md §16).
+
+    On ``multi_pod`` this is the pod: the transfer crosses the scale-out
+    hop from pod 0 to pod 1.  Topologies without a real pod boundary split
+    the fabric in half, so the pattern stays runnable (and comparable)
+    everywhere — it just doesn't cross an oversubscribed tier there.
+    """
+    pods = get_topology(fab).n_pods()
+    return fab.n_gpus // pods if pods >= 2 else fab.n_gpus // 2
+
+
+@register_pattern(logical="kv_transfer")
+class KVTransfer(CollectivePattern):
+    """Rail-aligned KV-cache push across the ``multi_pod`` scale-out hop.
+
+    The disaggregated-serving handoff (DESIGN.md §16): the KV cache a
+    prefill pod produced, sharded one ``nbytes`` slice per prefill GPU,
+    moves to the decode pod that will generate tokens against it.  Rank i
+    of pod 0 streams its full shard to rank i of pod 1 — one step,
+    ``pod_size`` concurrent flows, every one crossing the oversubscribed
+    inter-pod tier and paying reverse translation at the *decode* pod's
+    Link-MMU.  Each decode GPU receives into offset 0 of its KV arena, so
+    the first transfer after a flush walks every page of the shard and
+    later transfers into the same arena run warm — the two-regime
+    mechanism fig18 measures.
+
+    Asymmetric by construction (prefill ranks receive nothing), so the
+    engine simulates every receiving decode target.
+    """
+
+    name = "kv_transfer"
+    symmetric = False
+
+    @classmethod
+    def feasible(cls, fab):
+        return fab.n_gpus >= 2 and kv_block(fab) >= 1 \
+            and 2 * kv_block(fab) <= fab.n_gpus
+
+    def steps(self, nbytes, fab):
+        block = kv_block(fab)
+        return [[FlowSpec(src=i, dst=block + i, nbytes=nbytes, offset=0)
+                 for i in range(block)]]
+
+
+@register_pattern(logical="kv_transfer")
+class KVTransferStriped(KVTransfer):
+    """Re-sharding KV push: every prefill rank stripes to every decode rank.
+
+    Same payload as :class:`KVTransfer` (``block * nbytes`` total) but
+    each prefill rank splits its shard into ``block`` stripes, one per
+    decode rank — the layout changes pods, which is what a decode pod with
+    a different TP split needs.  Each decode GPU receives ``block``
+    small flows instead of one large one: same pages walked, finer-grained
+    arrival, more concurrent flows per source splitting the inter-pod
+    capacity — the trade the selection policy (DESIGN.md §14) prices.
+    """
+
+    name = "kv_transfer_striped"
+
+    def steps(self, nbytes, fab):
+        block = kv_block(fab)
+        stripe = nbytes // block
+        return [[FlowSpec(src=i, dst=block + j, nbytes=stripe,
+                          offset=i * stripe)
+                 for i in range(block) for j in range(block)]]
+
+
 def get_pattern(name: str) -> CollectivePattern:
     """Instantiate a registered pattern by name."""
     try:
@@ -490,4 +558,9 @@ def analytic_volume(name: str, nbytes: int, fab: FabricConfig) -> int:
              else topo.pod_group())
         m = n // g
         return n * ((g - 1) * m * chunk + (m - 1) * g * chunk)
+    if name in ("kv_transfer", "kv_transfer_striped"):
+        block = kv_block(fab)
+        if name == "kv_transfer":
+            return block * nbytes
+        return block * block * (nbytes // block)
     raise ValueError(f"no analytic volume for {name!r}")

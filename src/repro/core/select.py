@@ -55,6 +55,7 @@ FIXED_DEFAULTS: Dict[str, str] = {
     "all_gather": "all_gather",
     "reduce_scatter": "reduce_scatter",
     "broadcast": "broadcast",
+    "kv_transfer": "kv_transfer",
 }
 
 

@@ -121,6 +121,18 @@ class Topology:
         """Pod group of :class:`~repro.core.patterns.MultiPodAllToAll`."""
         return self.fab.gpus_per_node
 
+    # -- pod partition (disaggregated placement, DESIGN.md §16) ------------
+    # Only ``multi_pod`` has a real pod boundary; every other topology is
+    # one pod, so cross-pod placement questions degenerate to "rank 0's
+    # pod" and the KV-transfer pattern reports itself infeasible.
+    def n_pods(self) -> int:
+        """Number of scale-out pods the fabric is partitioned into."""
+        return 1
+
+    def pod_of(self, rank: int) -> int:
+        """Pod index a GPU rank lives in (0 on single-pod topologies)."""
+        return 0
+
     def describe(self) -> str:
         return self.name
 
@@ -252,6 +264,12 @@ class MultiPod(_BlockTopology):
 
     def pod_group(self) -> int:
         return self.block
+
+    def n_pods(self) -> int:
+        return self.fab.n_gpus // self.block
+
+    def pod_of(self, rank: int) -> int:
+        return rank // self.block
 
     def describe(self) -> str:
         return (f"multi_pod(pod={self.block}, "

@@ -74,6 +74,23 @@ class ModelConfig:
     # weights are gathered one group at a time.  1 = unchunked.
     ssm_scan_groups: int = 1
 
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """KV-cache footprint of one token across all layers, in bytes.
+
+        ``n_kv_heads * d_head`` per K and per V (the factor 2) per layer
+        that runs attention — SSM/hybrid patterns only cache KV on their
+        ``attn`` layers (Mamba state is step-local, not a growing cache).
+        This is the quantity the disaggregated serving handoff transfers
+        per prompt token (DESIGN.md §16).
+        """
+        if self.layer_pattern:
+            attn_per_block = sum(1 for kind in self.layer_pattern
+                                 if kind == "attn")
+            attn_layers = self.n_blocks * attn_per_block
+        else:
+            attn_layers = self.n_layers
+        return self.n_kv_heads * self.d_head * 2 * dtype_bytes * attn_layers
+
     @property
     def pattern(self) -> Tuple[str, ...]:
         if self.layer_pattern:

@@ -5,10 +5,14 @@
 # Link-TLB split (DESIGN.md §11).  The fleet layer (DESIGN.md §13) serves
 # one stream across N pod replicas behind a router, a bounded admission
 # queue and a queue-depth autoscaler whose spin-ups start stone-cold.
-# `python -m repro.serving --arch ... --rps ...` (optionally `--fleet`)
-# runs offline (no jax).
+# The disaggregation layer (DESIGN.md §16) splits prefill and decode onto
+# dedicated pods with an explicitly priced KV-cache transfer in between.
+# `python -m repro.serving --arch ... --rps ...` (optionally `--fleet`
+# or `--disagg P:D`) runs offline (no jax).
 from .arrivals import (Request, bursty_requests, poisson_requests,
                        trace_requests)
+from .disagg import (DisaggPoint, DisaggResult, KVHandoff, simulate_disagg,
+                     sweep_disagg)
 from .fleet import (FleetPoint, FleetResult, Replica, simulate_fleet,
                     sweep_fleet)
 from .scheduler import ContinuousBatcher, RequestStats, StepPlan
@@ -21,4 +25,6 @@ __all__ = [
     "PodStream", "ServingStep", "TrafficPoint", "TrafficResult",
     "serving_layout", "simulate_traffic", "sweep_traffic",
     "FleetPoint", "FleetResult", "Replica", "simulate_fleet", "sweep_fleet",
+    "DisaggPoint", "DisaggResult", "KVHandoff", "simulate_disagg",
+    "sweep_disagg",
 ]

@@ -17,6 +17,11 @@ tail-latency regime fig15 sweeps.
 (``--router``), a bounded admission queue (``--max-queue``) and, with
 ``--autoscale``, a queue-depth autoscaler whose spin-ups start with
 stone-cold TLBs — the fleet-scale regime fig16 sweeps (DESIGN.md §13).
+
+``--disagg P:D`` switches to prefill/decode disaggregation: P prefill pods
+and D decode pods, every request's KV cache crossing the pod boundary as an
+explicit ``kv_transfer`` collective whose latency lands on TTFT — the
+regime fig18 sweeps (DESIGN.md §16).  Mutually exclusive with ``--fleet``.
 """
 from __future__ import annotations
 
@@ -24,8 +29,22 @@ import argparse
 import sys
 
 from ..core.topology import TOPOLOGIES
+from .disagg import DisaggPoint, _disagg_point
 from .fleet import ROUTERS, FleetPoint, _fleet_point
 from .simulate import TrafficPoint, _traffic_point
+
+
+def _parse_disagg(spec: str) -> tuple:
+    """Parse the ``--disagg P:D`` pod split, e.g. ``1:2``."""
+    try:
+        p, _, d = spec.partition(":")
+        pods = (int(p), int(d))
+    except ValueError:
+        pods = (0, 0)
+    if pods[0] < 1 or pods[1] < 1:
+        raise argparse.ArgumentTypeError(
+            f"--disagg wants P:D with P,D >= 1 (e.g. 1:2), got {spec!r}")
+    return pods
 
 
 def main(argv=None) -> int:
@@ -119,7 +138,22 @@ def main(argv=None) -> int:
     fl.add_argument("--spinup-latency-ns", type=float, default=0.0,
                     help="delay between the scaling decision and the "
                          "replica becoming routable")
+    dg = p.add_argument_group(
+        "disaggregation",
+        "dedicated prefill/decode pods with KV-cache transfer "
+        "(DESIGN.md §16)")
+    dg.add_argument("--disagg", type=_parse_disagg, default=None,
+                    metavar="P:D",
+                    help="disaggregated mode: P prefill pods and D decode "
+                         "pods (routed by --router); incompatible with "
+                         "--fleet")
+    dg.add_argument("--kv-arena-mb", type=int, default=128,
+                    help="decode-pod KV arena ring size (MB): the "
+                         "transfer's steady-state Link-TLB working set")
     args = p.parse_args(argv)
+    if args.disagg is not None and args.fleet > 0:
+        p.error("--disagg and --fleet are mutually exclusive (a "
+                "disaggregated deployment is its own replica set)")
 
     pt = TrafficPoint(
         arch=args.arch, rps=args.rps, arrival=args.arrival,
@@ -134,7 +168,12 @@ def main(argv=None) -> int:
         pretranslation=args.pretranslate, prefetch=args.prefetch,
         trace_path=args.trace, engine=args.engine,
         profile_path=args.profile, policy=args.policy)
-    if args.fleet > 0:
+    if args.disagg is not None:
+        dp = DisaggPoint(traffic=pt, prefill_pods=args.disagg[0],
+                         decode_pods=args.disagg[1], router=args.router,
+                         kv_arena_bytes=args.kv_arena_mb * 2**20)
+        res = _disagg_point((dp,))
+    elif args.fleet > 0:
         fp = FleetPoint(
             traffic=pt, replicas=args.fleet, router=args.router,
             max_queue=args.max_queue, autoscale=args.autoscale,
@@ -166,6 +205,28 @@ def main(argv=None) -> int:
                   f"{row['routed']},{row['steps']},{row['walks']},"
                   f"{row['cold_comm_ns']/1e3:.2f},"
                   f"{row['warm_comm_ns']/1e3:.2f}")
+    if args.disagg is not None:
+        pp, dd = args.disagg
+        print(f"# disagg: {pp} prefill + {dd} decode pods, "
+              f"router={args.router}, {len(res.handoffs)} KV handoffs "
+              f"({res.kv_cold_handoffs} cold, {res.kv_walks} walks, "
+              f"{res.kv_fastpath_calls} fastpath)")
+        print("pod,role,routed,steps,walks,cold_comm_us,warm_comm_us")
+        for row in res.replica_rows():
+            print(f"{row['idx']},{row['role']},{row['routed']},"
+                  f"{row['steps']},{row['walks']},"
+                  f"{row['cold_comm_ns']/1e3:.2f},"
+                  f"{row['warm_comm_ns']/1e3:.2f}")
+        bd = res.ttft_breakdown()
+        if bd:
+            print(f"# TTFT decomposition (mean over {bd['n']:.0f} "
+                  f"handed-off requests, us): "
+                  f"prefill {bd['prefill_ns']/1e3:.2f} + "
+                  f"kv_wait {bd['kv_wait_ns']/1e3:.2f} + "
+                  f"kv_transfer {bd['kv_transfer_ns']/1e3:.2f} "
+                  f"(RAT excess {bd['kv_excess_ns']/1e3:.2f}) + "
+                  f"decode_wait {bd['decode_wait_ns']/1e3:.2f} = "
+                  f"ttft {bd['ttft_ns']/1e3:.2f}")
     served = res.first_token_served
     print(f"# steps: {len(res.steps)}"
           + (" (capped)" if res.steps_capped else "")

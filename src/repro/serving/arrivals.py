@@ -21,6 +21,11 @@ Three processes:
 * :func:`trace_requests` — replay a recorded trace file, one request per
   line: ``arrival_ns,prompt_tokens,output_tokens`` (``#`` comments and
   blank lines ignored).
+
+Determinism contract: the same generator with the same seed and parameters
+returns the identical request list byte-for-byte on every platform —
+everything downstream (simulate / fleet / disagg) inherits its determinism
+from this.
 """
 from __future__ import annotations
 

@@ -24,13 +24,12 @@ fronted by
   decision trades queue wait against the full cold-walk warmup tax that
   the paper prices on a single pod.
 
-The fleet event loop is deterministic: arrivals and replica step
-boundaries are processed in global time order (arrival first on ties,
-lowest replica index among replicas), every router/autoscaler input is a
-pure function of that ordering, and each replica's arrival sub-stream is
-data — so the serial and process-pooled sweep executors
-(:func:`sweep_fleet`) return bit-for-bit identical results on both
-simulation engines.
+Determinism contract: the fleet event loop processes arrivals and replica
+step boundaries in global time order (arrival first on ties, lowest
+replica index among replicas), every router/autoscaler input is a pure
+function of that ordering, and each replica's arrival sub-stream is data —
+so the serial and process-pooled sweep executors (:func:`sweep_fleet`)
+return bit-for-bit identical results on both simulation engines.
 """
 from __future__ import annotations
 
@@ -72,6 +71,11 @@ class Replica:
     retired_ns: Optional[float] = None
     last_busy_ns: float = 0.0          # end of its latest priced step
     routed: int = 0                    # requests ever routed to it
+    # Replica role in the router: "serve" (colocated fleet — the default,
+    # every replica handles prefill and decode) or "prefill"/"decode"
+    # (disaggregated mode, repro.serving.disagg — arrivals route only over
+    # prefill replicas, KV handoffs only over decode replicas).
+    role: str = "serve"
     stats: List[RequestStats] = field(default_factory=list)
     steps: List[ServingStep] = field(default_factory=list)
     stream: Optional[PodStream] = field(default=None, repr=False)
@@ -160,7 +164,7 @@ class FleetResult(ServingAggregates):
             cold = sum(s.comm_ns for s in steps if s.walks > 0)
             warm = sum(s.comm_ns for s in steps if s.walks == 0)
             rows.append(dict(
-                idx=rep.idx, spun_up_ns=rep.spun_up_ns,
+                idx=rep.idx, role=rep.role, spun_up_ns=rep.spun_up_ns,
                 retired_ns=rep.retired_ns, routed=rep.routed,
                 steps=len(steps),
                 walks=sum(s.walks for s in steps),

@@ -17,6 +17,11 @@ completes (prefill computes the first output token's logits), one
 inter-token sample per decode step, and the cold-vs-warm communication
 split (a step is *cold* when its collectives performed at least one page
 walk — the Link-TLB working set was not resident).
+
+Determinism contract: scheduling decisions are pure functions of the
+admitted request sequence and the committed step timings — no RNG, no wall
+clock — so a batcher replayed on the same inputs reproduces the same plans
+and latency samples bit-for-bit on either simulation engine.
 """
 from __future__ import annotations
 
@@ -42,6 +47,15 @@ class RequestStats:
     warm_comm_ns: float = 0.0    # comm time of its warm steps
     rat_excess_ns: float = 0.0   # sum of (comm - ideal comm) over its steps
     walks: int = 0
+    # Disaggregated-serving handoff accounting (DESIGN.md §16); left at the
+    # defaults in colocated mode, filled by repro.serving.disagg when the
+    # request crosses a prefill pod -> decode pod boundary.  All times are
+    # absolute on the one global clock every stream shares.
+    prefill_finish_ns: Optional[float] = None  # prefill pod completed prompt
+    kv_start_ns: Optional[float] = None        # KV transfer began on the link
+    kv_transfer_ns: float = 0.0                # priced transfer duration
+    kv_transfer_ideal_ns: float = 0.0          # zero-translation counterpart
+    kv_transfer_walks: int = 0                 # page walks the transfer paid
     _last_token_ns: Optional[float] = None
 
     # -- identity ------------------------------------------------------------
@@ -102,6 +116,41 @@ class RequestStats:
     @property
     def mean_itl_ns(self) -> Optional[float]:
         return (sum(self.itl_ns) / len(self.itl_ns)) if self.itl_ns else None
+
+    # -- disaggregation decomposition (DESIGN.md §16) ------------------------
+    # TTFT = prefill phase + transfer queueing + transfer + decode queueing;
+    # every term is None until the corresponding handoff stage happened.
+    @property
+    def kv_done_ns(self) -> Optional[float]:
+        if self.kv_start_ns is None:
+            return None
+        return self.kv_start_ns + self.kv_transfer_ns
+
+    @property
+    def kv_transfer_excess_ns(self) -> float:
+        """Transfer time beyond its zero-translation ideal (cold-RAT tax)."""
+        return self.kv_transfer_ns - self.kv_transfer_ideal_ns
+
+    @property
+    def prefill_ns(self) -> Optional[float]:
+        """Arrival -> prefill completion (queueing + compute + comm)."""
+        if self.prefill_finish_ns is None:
+            return None
+        return self.prefill_finish_ns - self.req.arrival_ns
+
+    @property
+    def kv_wait_ns(self) -> Optional[float]:
+        """Prefill completion -> transfer start (serialized-link queueing)."""
+        if self.kv_start_ns is None or self.prefill_finish_ns is None:
+            return None
+        return self.kv_start_ns - self.prefill_finish_ns
+
+    @property
+    def decode_wait_ns(self) -> Optional[float]:
+        """Transfer completion -> first token (decode admission + step)."""
+        if self.first_token_ns is None or self.kv_done_ns is None:
+            return None
+        return self.first_token_ns - self.kv_done_ns
 
 
 @dataclass

@@ -19,6 +19,11 @@ translation disabled a collective's duration depends only on its signature,
 so each signature is priced once and the ideal timeline is accumulated
 analytically.  Per-request degradation is then baseline vs ideal
 time-to-first-token on an identical step sequence.
+
+Determinism contract: given the same request list and ``SimConfig``,
+:func:`simulate_traffic` is bit-for-bit deterministic across engines
+(event ≡ vectorized) and sweep executors (:func:`fan_out_points` serial ≡
+process-pooled) — locked by ``tests/test_serving.py``.
 """
 from __future__ import annotations
 

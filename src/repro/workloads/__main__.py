@@ -68,6 +68,11 @@ def main(argv=None) -> int:
                    help="collective algorithm selection: fixed | auto | "
                         "table:<path> (repro.core.select; fixed keeps the "
                         "historical choices bit-for-bit)")
+    p.add_argument("--disagg", type=int, default=0, metavar="PROMPT_TOKENS",
+                   help="also derive the disaggregation KV-cache handoff "
+                        "for a prompt of this many tokens: per-GPU shard "
+                        "size and the resolved kv_transfer collective "
+                        "(DESIGN.md §16)")
     args = p.parse_args(argv)
 
     profile = None
@@ -113,6 +118,20 @@ def main(argv=None) -> int:
         print("# policy resolutions (logical -> concrete, provenance):")
         for (logical, coll, by), k in sorted(prov.items()):
             print(f"#   {k:4d} x {logical:<14s} -> {coll:<18s} [{by}]")
+    if args.disagg > 0:
+        from ..configs import get_config
+        from .derive import derive_kv_transfer, kv_transfer_fabric
+        mcfg = get_config(args.arch) if isinstance(args.arch, str) else args.arch
+        call = derive_kv_transfer(mcfg, args.disagg, pod, policy=args.policy)
+        kv_fab = kv_transfer_fabric(pod)
+        print(f"# disaggregation KV handoff ({args.disagg}-token prompt, "
+              f"DESIGN.md §16):")
+        print(f"#   {mcfg.kv_bytes_per_token(pod.dtype_bytes)} B/token x "
+              f"{args.disagg} tokens / {pod.n_gpus} GPUs = "
+              f"{call.nbytes/2**20:.2f} MB per-GPU shard")
+        print(f"#   {call.logical} -> {call.collective} [{call.resolved_by}] "
+              f"over {kv_fab.n_gpus} GPUs ({kv_fab.topology}, "
+              f"pod_size={kv_fab.pod_size})")
 
     rep = replay(trace, cfg=cfg)
     print("step,comm_us,ideal_us,degradation,walks,requests")

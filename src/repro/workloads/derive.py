@@ -226,6 +226,56 @@ def moe_a2a_bytes(cfg: "ModelConfig", tokens_local: int, ep: int,
     return ep * cap * e_loc * cfg.d_model * dtype_bytes
 
 
+def kv_transfer_fabric(pod: PodSpec) -> FabricConfig:
+    """The prefill→decode pair fabric one KV handoff is priced on.
+
+    Two ``pod.n_gpus``-GPU pods joined over the ``multi_pod`` scale-out hop
+    (pod 0 = prefill ranks, pod 1 = decode ranks), so every transfer flow
+    crosses the oversubscribed inter-pod tier and pays reverse translation
+    at the decode pod's Link-MMU (DESIGN.md §16).  The pods' internal
+    topology is irrelevant here — the ``kv_transfer`` patterns emit only
+    cross-pod flows — so the pair fabric is always ``multi_pod`` regardless
+    of ``pod.topology``.
+    """
+    return FabricConfig(n_gpus=2 * pod.n_gpus, topology="multi_pod",
+                        pod_size=pod.n_gpus)
+
+
+def kv_shard_bytes(cfg: "ModelConfig", prompt_tokens: int,
+                   pod: PodSpec) -> int:
+    """Per-GPU KV shard of one request's handoff (pattern ``nbytes``).
+
+    The prompt's full KV cache — ``kv_bytes_per_token * prompt_tokens`` —
+    is sharded across the prefill pod's GPUs, so each of the ``pod.n_gpus``
+    transfer pairs moves the ceiling share.  This is the per-GPU buffer
+    size :class:`~repro.core.patterns.KVTransfer` expects.
+    """
+    total = cfg.kv_bytes_per_token(pod.dtype_bytes) * prompt_tokens
+    return max(1, -(-total // pod.n_gpus))
+
+
+def derive_kv_transfer(cfg: "ModelConfig", prompt_tokens: int, pod: PodSpec,
+                       *, policy=None, state: str = "cold",
+                       label: str = "kv_transfer",
+                       step: int = 0) -> CollectiveCall:
+    """The KV-cache handoff of one prefilled request as a CollectiveCall.
+
+    Requested logically as ``"kv_transfer"`` and resolved by ``policy``
+    (DESIGN.md §14) keyed on the decode arena's TLB ``state`` — so a table
+    or auto policy can pick the striped re-shard variant where it wins,
+    while the fixed default keeps the rail-aligned push.  ``group`` is the
+    whole pair fabric (``2 * pod.n_gpus``).
+    """
+    fab = kv_transfer_fabric(pod)
+    nbytes = kv_shard_bytes(cfg, prompt_tokens, pod)
+    pol = get_policy(policy) or get_policy("fixed")
+    res = pol.resolve("kv_transfer", nbytes, fab, state=state)
+    return CollectiveCall(
+        label=label, collective=res.collective, nbytes=nbytes,
+        group=fab.n_gpus, compute_ns=0.0, buffer="kv_arena", step=step,
+        logical=res.logical, resolved_by=res.provenance)
+
+
 def _compute_ns(flops_per_gpu: float, pod: PodSpec) -> float:
     return flops_per_gpu / (pod.peak_tflops * 1e3 * pod.mfu)
 

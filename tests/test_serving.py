@@ -17,8 +17,9 @@ import sys
 import pytest
 
 from repro.core.config import SimConfig
-from repro.serving import (Request, TrafficPoint, bursty_requests,
-                           poisson_requests, simulate_traffic,
+from repro.serving import (DisaggPoint, Request, TrafficPoint,
+                           bursty_requests, poisson_requests,
+                           simulate_disagg, simulate_traffic, sweep_disagg,
                            sweep_traffic, trace_requests)
 from repro.workloads import PodSpec, pod_fabric, resolve_pod
 from repro.workloads.derive import StepEmitter
@@ -505,3 +506,179 @@ def test_fig15_bursty_tail_exceeds_mean():
         "fig15/check_bursty_tail_concentration"]
     assert "claws_back=True" in rows[
         "fig15/check_pretranslation_claws_back_tail"]
+
+
+# ---------------------------------------------------------- disaggregation
+class TinyDisaggMoE(TinyServeMoE):
+    """TinyServeMoE plus the KV-sizing hook the disagg handoff reads."""
+    name = "tiny-disagg-moe"
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        return (self.n_kv_heads * self.d_head * 2 * dtype_bytes
+                * self.n_layers)
+
+
+TINY_KV = TinyDisaggMoE()
+
+
+def _disagg_cfg(retention=None, engine="event"):
+    cfg = SimConfig(fabric=pod_fabric(resolve_pod(
+        PodSpec(n_gpus=16), TINY_KV, "decode")), engine=engine)
+    if retention is not None:
+        cfg = cfg.replace(tlb_retention_ns=retention)
+    return cfg
+
+
+class TestDisaggHandoff:
+    def test_every_multi_token_request_hands_off(self):
+        reqs = tiny_requests([0.0, 1000.0, 2000.0], prompt=16, output=3)
+        reqs.append(Request(3, 3000.0, 16, 1))       # single-token request
+        res = simulate_disagg(TINY_KV, reqs, n_gpus=16, cfg=_disagg_cfg())
+        assert sorted(h.rid for h in res.handoffs) == [0, 1, 2]
+        # output_tokens <= 1 finishes at prefill, never crosses the hop
+        one = res.requests[3]
+        assert one.req.rid == 3 and one.kv_start_ns is None
+        assert one.finished and one.first_token_ns is not None
+
+    def test_ttft_decomposition_sums(self):
+        reqs = tiny_requests([0.0, 1000.0, 2000.0], prompt=16, output=3)
+        res = simulate_disagg(TINY_KV, reqs, n_gpus=16, cfg=_disagg_cfg())
+        bd = res.ttft_breakdown()
+        assert bd["n"] == 3
+        assert bd["ttft_ns"] == pytest.approx(
+            bd["prefill_ns"] + bd["kv_wait_ns"] + bd["kv_transfer_ns"]
+            + bd["decode_wait_ns"])
+        # per request: the transfer lands on TTFT (DESIGN.md §16.1)
+        for r in res.requests[:3]:
+            assert r.kv_transfer_ns > 0
+            assert (r.req.arrival_ns + r.first_token_ns
+                    >= r.kv_start_ns + r.kv_transfer_ns)
+
+    def test_transfer_serialization_keeps_decode_arrivals_sorted(self):
+        # A burst of simultaneous prompts: every handoff routes to the one
+        # decode pod, whose link serializes them — admission must still be
+        # nondecreasing (ContinuousBatcher.add asserts this itself).
+        reqs = tiny_requests([0.0] * 6, prompt=16, output=3)
+        res = simulate_disagg(TINY_KV, reqs, n_gpus=16, cfg=_disagg_cfg())
+        starts = [h.start_ns for h in res.handoffs]
+        assert starts == sorted(starts)
+        assert all(r.finished for r in res.requests)
+
+    def test_bad_split_and_router_raise(self):
+        reqs = tiny_requests([0.0], prompt=16, output=2)
+        with pytest.raises(ValueError):
+            simulate_disagg(TINY_KV, reqs, n_gpus=16, prefill_pods=0)
+        with pytest.raises(ValueError):
+            simulate_disagg(TINY_KV, reqs, n_gpus=16, router="nope")
+
+
+def test_disagg_retention():
+    """An idle decode pod re-pays the KV-transfer walks (DESIGN.md §16.3).
+
+    One-slot arena (kv_arena_bytes == one page-aligned shard), so both
+    transfers hit the same arena offset: without retention the second
+    rides the first's warmed translations; with the 5 s gap past
+    ``tlb_retention_ns`` the link session flushes and re-pays in full.
+    """
+    reqs = tiny_requests([0.0, 5e9], prompt=64, output=3)
+    arena = 2 * 2**20                                # exactly one 2 MB slot
+    warm = simulate_disagg(TINY_KV, reqs, n_gpus=16, cfg=_disagg_cfg(None),
+                           kv_arena_bytes=arena)
+    cold = simulate_disagg(TINY_KV, reqs, n_gpus=16,
+                           cfg=_disagg_cfg(1_000_000.0),
+                           kv_arena_bytes=arena)
+    w = {h.rid: h for h in warm.handoffs}
+    c = {h.rid: h for h in cold.handoffs}
+    assert w[0].offset == w[1].offset == 0           # same arena region
+    assert w[0].walks > 0 and c[0].walks > 0         # first contact walks
+    assert w[1].walks == 0                           # retained: warm
+    assert c[1].walks == c[0].walks > 0              # flushed: full re-pay
+    assert warm.kv_cold_handoffs == 1 and cold.kv_cold_handoffs == 2
+    assert cold.kv_excess_total_ns > warm.kv_excess_total_ns
+
+
+def _disagg_points():
+    base = dict(arch=TINY_KV, n_requests=6, steps_cap=80, prompt_mean=16,
+                output_mean=3, retention_ns=100_000.0, max_decode_slots=4,
+                prefill_chunk_tokens=32)
+    return [DisaggPoint(traffic=TrafficPoint(rps=200.0, seed=5, **base)),
+            DisaggPoint(traffic=TrafficPoint(rps=200.0, arrival="bursty",
+                                             seed=5, burst_size=3, **base),
+                        prefill_pods=2, decode_pods=1)]
+
+
+def _disagg_fingerprint(res):
+    return (
+        [(h.rid, h.decode_idx, h.offset, h.start_ns, h.transfer_ns,
+          h.ideal_ns, h.walks) for h in res.handoffs],
+        [(s.t_start, s.t_end, s.comm_ns, s.ideal_comm_ns, s.walks)
+         for s in res.steps],
+        res.ttft_percentiles(), res.itl_percentiles())
+
+
+def test_disagg_serial_equals_pooled():
+    """sweep_disagg's executors are bit-for-bit identical (DESIGN.md §16.4)."""
+    pts = _disagg_points()
+    serial = sweep_disagg(pts, workers=0)
+    pooled = sweep_disagg(pts, workers=2)
+    for pt in pts:
+        assert _disagg_fingerprint(serial[pt]) == \
+            _disagg_fingerprint(pooled[pt])
+
+
+def test_disagg_engines_agree():
+    """Event and vectorized engines price disagg bit-for-bit (DESIGN.md §16.4)."""
+    reqs = tiny_requests([0.0, 500.0, 1500.0], prompt=24, output=4)
+    runs = [simulate_disagg(TINY_KV, reqs, n_gpus=16,
+                            cfg=_disagg_cfg(engine=eng))
+            for eng in ("event", "vectorized")]
+    assert _disagg_fingerprint(runs[0]) == _disagg_fingerprint(runs[1])
+
+
+def test_disagg_off_colocated_bit_for_bit():
+    # Regression for the colocated path: pricing a disagg deployment in
+    # between must not perturb simulate_traffic (no shared mutable state);
+    # the absolute colocated numbers themselves are locked by the goldens
+    # (tests/test_golden_figs.py).
+    pt = TrafficPoint(arch=TINY_KV, n_requests=5, rps=300.0, seed=9,
+                      steps_cap=40, prompt_mean=16, output_mean=3)
+
+    def price():
+        res = sweep_traffic([pt], workers=0)[pt]
+        return ([(s.t_start, s.t_end, s.comm_ns, s.walks)
+                 for s in res.steps], res.ttft_percentiles())
+
+    before = price()
+    simulate_disagg(TINY_KV, pt.requests(), n_gpus=16, cfg=_disagg_cfg())
+    assert price() == before
+
+
+class TestDisaggCLI:
+    def test_disagg_cli_offline_and_fleet_exclusive(self):
+        code = (
+            "import sys\n"
+            "from repro.serving.__main__ import main\n"
+            "rc = main(['--arch', 'granite-moe-1b-a400m', '--rps', '8',\n"
+            "           '--disagg', '1:1', '--steps-cap', '40',\n"
+            "           '--requests', '3', '--prompt-mean', '64',\n"
+            "           '--output-mean', '2'])\n"
+            "assert rc == 0, rc\n"
+            "assert 'jax' not in sys.modules, 'CLI must stay jax-free'\n"
+        )
+        root = pathlib.Path(__file__).resolve().parent.parent
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=300,
+            env={**os.environ, "PYTHONPATH": str(root / "src")},
+            cwd=str(root))
+        assert out.returncode == 0, out.stderr
+        assert "# disagg: 1 prefill + 1 decode pods" in out.stdout
+        assert "kv_transfer" in out.stdout
+        bad = subprocess.run(
+            [sys.executable, "-m", "repro.serving", "--arch",
+             "granite-moe-1b-a400m", "--disagg", "1:1", "--fleet", "2"],
+            capture_output=True, text=True, timeout=60,
+            env={**os.environ, "PYTHONPATH": str(root / "src")},
+            cwd=str(root))
+        assert bad.returncode != 0
+        assert "mutually exclusive" in bad.stderr
